@@ -1,0 +1,65 @@
+"""Paper Fig. 2: the density φ(·) of stochastic gradients vs error-corrected
+gradients during real training.
+
+The paper plots φ(g_t) and φ(g_t + e_t) for VGG19/CIFAR10 (batch 128) and
+notes min φ(g+e) > 0.13 — the corrected direction stays dense, which is what
+makes the scaled-sign compressor's effective δ benign (Lemma 8). We reproduce
+the measurement on a ~10M-param transformer trained with EF-SIGNSGD on
+synthetic tokens, logging per-leaf densities along the run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ScaledSignCompressor, apply_updates, corrected_density, ef_step, init_ef_state
+from repro.core.compressors import density
+from repro.data.synthetic import token_batches
+from repro.models import transformer as T
+
+
+def run(steps: int = 60, lr: float = 0.05, seed: int = 0):
+    cfg = dataclasses.replace(
+        get_config("llama3.2-1b"),
+        name="llama-10m", num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=1024, vocab_size=2048,
+        param_dtype="float32", compute_dtype="float32", attn_chunk=64,
+    )
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    state = init_ef_state(params)
+    comp = ScaledSignCompressor()
+    batches = token_batches(seed, 8, 64, cfg.vocab_size)
+
+    grad_fn = jax.jit(jax.grad(lambda p, b: T.loss_fn(p, cfg, b)[0]))
+
+    dens_g, dens_corrected = [], []
+    for i in range(steps):
+        batch = next(batches)
+        g = grad_fn(params, batch)
+        u = jax.tree.map(lambda x: -lr * x, g)
+        # measure BEFORE the step, matching the paper's φ(g) vs φ(g+e)
+        dens_g.append([float(density(x)) for x in jax.tree.leaves(g)])
+        dens_corrected.append(
+            [float(d) for d in jax.tree.leaves(corrected_density(u, state))]
+        )
+        out, state = ef_step(comp, u, state)
+        params = apply_updates(params, out)
+
+    dg = np.array(dens_g[5:])  # skip warmup, as the paper's histogram does
+    dc = np.array(dens_corrected[5:])
+    return {
+        "grad_density_mean": float(dg.mean()),
+        "grad_density_min": float(dg.min()),
+        "corrected_density_mean": float(dc.mean()),
+        "corrected_density_min": float(dc.min()),
+    }
+
+
+def run_rows():
+    r = run()
+    return [(f"fig2_{k}", 0.0, round(v, 4)) for k, v in r.items()]

@@ -1,0 +1,98 @@
+"""§Perf hill-climb runner: re-lowers a chosen (arch × shape) with a named
+variant and records the roofline delta vs baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --pair granite_train --variant a2a
+
+Variants are hypothesis-driven changes (see EXPERIMENTS.md §Perf for the
+napkin math); each run writes benchmarks/results/dryrun/<combo>__<tag>.json
+so baseline and variants sit side by side.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+PAIRS = {
+    # most representative of the paper's technique: EF-sign aggregation over
+    # the 16-way data axis (collective-bound)
+    "granite_train": ("granite_moe_1b_a400m", "train_4k"),
+    # worst memory fit + biggest model (fsdp + EF optimizer)
+    "jamba_train": ("jamba_1_5_large_398b", "train_4k"),
+    # worst useful-FLOPs fraction: 32k prefill with masked-full attention on
+    # a sliding-window arch
+    "llava_prefill": ("llava_next_mistral_7b", "prefill_32k"),
+}
+
+VARIANTS = {
+    # gradient-exchange changes (granite_train)
+    "baseline": {},
+    "a2a": {"strategy": "ef_alltoall"},
+    "dense": {"strategy": "dense"},
+    # attention changes (llava_prefill)
+    "winslice": {"window_slicing": True},
+    "winslice_c1k": {"window_slicing": True, "attn_chunk": 1024},
+    "chunk1k": {"attn_chunk": 1024},
+    # jamba memory/collective changes
+    "seqchunk2k": {"attn_chunk": 2048},
+    "nosp": {"cfg_overrides": {"residual_seq_shard": False}},
+    "ssmremat": {"cfg_overrides": {"ssm_chunk_remat": True}},
+    "ssmremat_nosp": {"cfg_overrides": {"ssm_chunk_remat": True, "residual_seq_shard": False}},
+    "winslice": {"cfg_overrides": {"attn_window_slicing": True}},
+    "winslice_ssmremat": {"cfg_overrides": {"attn_window_slicing": True, "ssm_chunk_remat": True}},
+}
+
+
+def run(pair: str, variant: str, out_dir: str):
+    from repro.launch.dryrun import RESULTS_DIR, lower_combo
+
+    arch, shape = PAIRS[pair]
+    kw = dict(VARIANTS[variant])
+    kw.pop("window_slicing", None)
+    overrides = kw.pop("cfg_overrides", None)
+    if overrides:
+        # flip config fields through the registry so lower_combo sees them
+        import repro.configs.base as base
+        import repro.launch.dryrun as dr
+
+        orig = base.get_config
+
+        def patched(a):
+            return dataclasses.replace(orig(a), **overrides)
+
+        base.get_config = patched
+        dr.get_config = patched
+
+    rec = lower_combo(arch, shape, multi_pod=False, **kw)
+    name = f"{arch}__{shape}__single__{pair}-{variant}"
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(
+        f"{pair}/{variant}: compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+        f"collective={r['collective_s']:.3f}s dominant={r['dominant']} "
+        f"temp={rec['memory'].get('temp_size_in_bytes',0)/2**30:.1f}GiB "
+        f"useful={rec['useful_flops_ratio']:.3f}"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(PAIRS))
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    from repro.launch.dryrun import RESULTS_DIR
+
+    out = args.out or RESULTS_DIR
+    os.makedirs(out, exist_ok=True)
+    run(args.pair, args.variant, out)
+
+
+if __name__ == "__main__":
+    main()

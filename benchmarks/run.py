@@ -1,0 +1,77 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  counterexamples   — paper §3 / Fig. 1 (CE1–CE3)
+  generalization    — paper §5.2 / Fig. 3 (Wilson least-squares, span distance)
+  sparse_noise      — paper A.1 / Fig. 5
+  density_fig2      — paper Fig. 2 (density of g vs g+e during training)
+  nn_proxy          — paper §6 / Fig. 4 + Tables 1/3/4 protocol (synthetic proxy)
+  compression       — paper §6.1 wire-bits accounting (~32× claim)
+  kernels_bench     — fused EF-sign kernel stage
+  roofline          — §Roofline summary from dry-run records (if present)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only name] [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true", help="full-length nn_proxy run")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        compression,
+        counterexamples,
+        density_fig2,
+        generalization,
+        kernels_bench,
+        nn_proxy,
+        roofline,
+        sparse_noise,
+    )
+
+    suites = {
+        "counterexamples": counterexamples.run,
+        "generalization": generalization.run_rows,
+        "sparse_noise": sparse_noise.run_rows,
+        "density_fig2": density_fig2.run_rows,
+        "nn_proxy": lambda: nn_proxy.run_rows(fast=not args.full),
+        "compression": compression.run_rows,
+        "kernels_bench": kernels_bench.run_rows,
+        "roofline": roofline.run_rows,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # a missing dry-run dir shouldn't kill the run
+            print(f"{name}_ERROR,0,{type(e).__name__}", flush=True)
+            continue
+        wall = (time.perf_counter() - t0) * 1e6
+        for r in rows:
+            print(f"{r[0]},{r[1]},{r[2]}", flush=True)
+            all_rows.append(r)
+        print(f"{name}_total,{wall:.0f},{len(rows)}", flush=True)
+
+    out_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_rows.json"), "w") as f:
+        json.dump([list(r) for r in all_rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+with multi-worker error-feedback compressed gradient aggregation.
+
+This is the paper's algorithm as a *distributed systems feature*: per-worker
+EF-sign compression, all-gather exchange (or the beyond-paper all-to-all
+double compression with ``--strategy ef_alltoall``), identical aggregated
+updates everywhere, ~32× less gradient traffic than dense fp32.
+
+On the CPU container this runs on a host mesh with fake devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/distributed_ef_training.py --steps 200
+
+(The env var is set inside the script if unset, before jax imports.)
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import dataclasses
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--strategy", default="ef_allgather",
+                    choices=["dense", "ef_allgather", "ef_alltoall", "majority_vote"])
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.loop import TrainJob, run_training
+
+    # ~100M params: llama3.2-1b family scaled to 8 layers / d512
+    cfg = dataclasses.replace(
+        get_config("llama3.2-1b"),
+        name="llama-100m", num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=32000,
+        param_dtype="float32", compute_dtype="float32", attn_chunk=128,
+    )
+    total, _ = cfg.param_counts()
+    print(f"model: {cfg.name}  params={total/1e6:.1f}M  strategy={args.strategy}")
+
+    mesh = make_host_mesh(data=4, model=2)
+    job = TrainJob(
+        cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
+        lr=0.01, optimizer="sgd", strategy=args.strategy, policy="tp",
+        log_every=20,
+    )
+    _, hist = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f}; "
+          f"wire bytes/step/device = {hist[-1]['wire_bytes']:.3g}; "
+          f"corrected-gradient density φ = {hist[-1]['density']:.3f}")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: EF-SIGNSGD (paper Alg. 1) vs SGDM vs SIGNSGD on a tiny LM.
+
+Runs three short training runs of the reduced llama3.2-1b config on synthetic
+tokens and prints the loss trajectories plus the exact per-step wire bytes —
+the paper's two headline claims (EF matches SGD; sign alone is worse;
+communication shrinks ~32×) in one script.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.compressors import ScaledSignCompressor, tree_wire_bits, IdentityCompressor
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.train.loop import TrainJob, run_training
+
+
+def main():
+    cfg = reduced(get_config("llama3.2-1b"))
+    mesh = make_host_mesh(data=1, model=1)
+
+    results = {}
+    for optimizer in ("sgdm", "signsgd", "ef_signsgd"):
+        job = TrainJob(
+            cfg=cfg, mesh=mesh, steps=60, batch=8, seq=64,
+            lr=0.05 if optimizer != "sgdm" else 0.1,
+            optimizer=optimizer, strategy="dense", log_every=20,
+        )
+        _, hist = run_training(job)
+        results[optimizer] = [round(h["loss"], 3) for h in hist]
+        print(f"{optimizer:12s} loss: {results[optimizer]}")
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    dense = tree_wire_bits(IdentityCompressor(), params)
+    sign = tree_wire_bits(ScaledSignCompressor(), params)
+    print(f"\nwire bits/step: dense fp32 = {dense:,}  EF-sign = {sign:,} "
+          f"({dense / sign:.1f}x reduction — paper §6.1)")
+    assert results["ef_signsgd"][-1] <= results["signsgd"][-1] + 0.05
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.base import ARCH_IDS, all_configs, get_config, reduced

@@ -1,0 +1,83 @@
+"""Config registry: one module per assigned architecture (+ the paper's own).
+
+Each ``<arch>.py`` exposes ``CONFIG: ModelConfig`` with the exact assigned
+hyper-parameters (source cited in ``source``), plus the registry offers
+``reduced(cfg)`` — the ≤2-layer, d_model≤512, ≤4-expert smoke variant the
+brief requires for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = [
+    "granite_moe_1b_a400m",
+    "llama3_2_1b",
+    "qwen1_5_4b",
+    "llava_next_mistral_7b",
+    "falcon_mamba_7b",
+    "mistral_nemo_12b",
+    "deepseek_7b",
+    "jamba_1_5_large_398b",
+    "phi3_5_moe_42b_a6_6b",
+    "whisper_large_v3",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+# the assignment spells ids with dots/dashes; accept those too
+_ALIASES.update({
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "deepseek-7b": "deepseek_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "whisper-large-v3": "whisper_large_v3",
+})
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch_id = _ALIASES.get(arch, arch)
+    if arch_id not in ARCH_IDS and arch_id != "paper_mlp":
+        raise ValueError(f"unknown arch {arch!r}; options: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant: same family, 2 layers (one hybrid period), tiny dims."""
+    d_model = min(cfg.d_model, 256)
+    num_heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    num_kv = min(cfg.num_kv_heads, max(1, num_heads // 2)) if cfg.num_heads else 0
+    period = cfg.hybrid_period if cfg.arch_type == "hybrid" else 0
+    layers = period if period else 2
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-reduced",
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=min(cfg.head_dim, 64) if cfg.head_dim else 0,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 1024),
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_seq=min(cfg.encoder_seq, 32) if cfg.encoder_seq else 0,
+        num_patch_tokens=min(cfg.num_patch_tokens, 16) if cfg.num_patch_tokens else 0,
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+        attn_chunk=64,
+    )

@@ -1,0 +1,18 @@
+"""deepseek-7b [dense] — llama-arch MHA (kv=32). [arXiv:2401.02954]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    arch_type="dense",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=102400,
+    rope_theta=10_000.0,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,17 @@
+"""falcon-mamba-7b [ssm] — attention-free mamba-1, d_state=16. [arXiv:2410.05355]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    arch_type="ssm",
+    num_layers=64,
+    d_model=4096,
+    d_ff=0,  # pure mamba blocks, no MLP sublayer
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2410.05355",
+)

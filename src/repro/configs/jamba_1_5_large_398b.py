@@ -1,0 +1,28 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2
+every 2nd layer; 94B active. No positional encoding (mamba layers provide
+order) → rope_theta=0. [arXiv:2403.19887]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    hybrid_period=8,
+    hybrid_attn_index=4,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    rope_theta=0.0,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2403.19887",
+)

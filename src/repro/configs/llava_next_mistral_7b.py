@@ -1,0 +1,25 @@
+"""llava-next-mistral-7b [vlm] — mistral-7b backbone + anyres patch stub.
+
+The ViT/SigLIP vision tower + projector are STUBBED per the brief's carve-out:
+``input_specs`` supplies (B, 576, d_model) precomputed patch embeddings that
+are prepended to the text sequence (576 = llava-next base-resolution grid).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    arch_type="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,  # mistral-7b backbone window
+    num_patch_tokens=576,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

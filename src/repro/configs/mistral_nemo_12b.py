@@ -1,0 +1,19 @@
+"""mistral-nemo-12b [dense] — 128k-context dense GQA (head_dim 128, not d/H).
+[hf:mistralai/Mistral-Nemo-Base-2407]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1_000_000.0,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="hf:mistralai/Mistral-Nemo-Base-2407",
+)

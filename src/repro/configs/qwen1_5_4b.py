@@ -1,0 +1,19 @@
+"""qwen1.5-4b [dense] — MHA (kv=20) with QKV bias. [hf:Qwen/Qwen1.5-0.5B family]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=128,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="hf:Qwen/Qwen1.5-0.5B (family card; assigned 4b dims)",
+)

@@ -1,0 +1,54 @@
+"""The paper's contribution: compressors, error feedback, EF optimizers,
+and distributed compressed-gradient aggregation."""
+
+from repro.core.compressors import (
+    Compressor,
+    ScaledSignCompressor,
+    UnscaledSignCompressor,
+    BlockScaledSignCompressor,
+    TopKCompressor,
+    RandomKCompressor,
+    QSGDCompressor,
+    LowRankCompressor,
+    IdentityCompressor,
+    get_compressor,
+    density,
+    pack_signs,
+    unpack_signs,
+    compress_tree,
+    roundtrip_tree,
+    tree_wire_bits,
+)
+from repro.core.error_feedback import (
+    EFState,
+    init_ef_state,
+    ef_step,
+    error_norm_sq,
+    lemma3_bound,
+    corrected_density,
+)
+from repro.core.optim import (
+    Transform,
+    chain,
+    sgd,
+    signsgd,
+    signum,
+    adam,
+    ef_sgd,
+    ef_transform,
+    apply_updates,
+    get_optimizer,
+    constant_schedule,
+    step_decay_schedule,
+    cosine_schedule,
+)
+from repro.core.aggregation import (
+    AggState,
+    AggInfo,
+    init_agg_state,
+    aggregate,
+    dense_mean,
+    ef_allgather,
+    ef_alltoall,
+    majority_vote,
+)

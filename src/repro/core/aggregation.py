@@ -1,0 +1,340 @@
+"""Distributed gradient aggregation strategies.
+
+The paper analyses single-worker EF-SGD and explicitly names the multi-worker
+extension as future work (§7). This module supplies that extension — it is the
+piece that turns the paper's operator into a *distributed systems* feature.
+
+All functions here run **inside** ``shard_map`` over the data-parallel mesh
+axes (``('data',)`` single-pod tp / ``('pod',)`` multi-pod); the remaining
+mesh axes stay in GSPMD-auto mode so tensor/expert/fsdp parallelism composes
+below us. For that reason every tensor op here is *sharding-preserving*:
+sign payloads are bit-packed along each leaf's LAST axis only (never a full
+flatten, which would force XLA to replicate fsdp-sharded leaves), and
+decompress-accumulate runs as a fori-loop over workers (two live buffers
+instead of a (W, leaf) materialization).
+
+Strategies
+----------
+dense
+    ``lax.pmean`` of fp32 gradients — the SGD baseline; ring all-reduce moves
+    ≈ 2·4·d bytes per device.
+
+ef_allgather   (paper-faithful multi-worker EF)
+    worker i:  p_i = u_i + e_i ;  payload_i = C(p_i) ;  e_i ← p_i − C⁻¹(payload_i)
+    exchange:  all-gather payloads; every worker decompresses all W payloads
+    and averages. Wire: (W−1)·(d/8 + 4) bytes received per device for sign —
+    a 64/W-fold reduction vs dense; exact at small W, fades as W grows.
+
+ef_alltoall    (beyond paper: double compression, à la DoubleSqueeze/1-bit Adam)
+    worker i chunks p_i (last axis) into W pieces and sign-compresses each;
+    all-to-all routes chunk j of every worker to worker j; worker j
+    decompresses + averages its chunk, re-compresses the mean with a second,
+    sharded error buffer (server-side EF), and the result is all-gathered.
+    Wire ≈ 2·d/8 bytes — W-independent, the full ~32×.
+
+majority_vote  (Bernstein et al. '19 baseline — known non-convergent cases)
+    sign of the sum of signs; no error feedback.
+
+Every strategy returns ``(aggregated_update, new_state, info)`` where ``info``
+carries the wire-byte count (used by the roofline cross-check) and the density
+φ of the corrected steps (Fig 2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compressors import (
+    Compressor,
+    ScaledSignCompressor,
+    SignPayload,
+    UnscaledSignCompressor,
+    density,
+    packed_len,
+    sign_decode,
+    sign_encode,
+    unpack_signs_last,
+)
+
+AxisNames = tuple[str, ...]
+
+_SIGN_TYPES = (ScaledSignCompressor, UnscaledSignCompressor)
+
+
+class AggInfo(NamedTuple):
+    wire_bytes_per_device: jax.Array  # what this device receives per step
+    mean_density: jax.Array  # mean φ(p) over leaves (Lemma 8 quality)
+
+
+class AggState(NamedTuple):
+    worker_error: Any  # per-worker EF residual (pytree like params) or ()
+    server_error: Any  # sharded server-side residual for double compression or ()
+    key: jax.Array
+    steps: jax.Array
+
+
+def _axis_size(axis_names: AxisNames) -> int:
+    w = 1
+    for a in axis_names:
+        w = w * lax.axis_size(a)
+    return w
+
+
+def _chunk_last(n_last: int, w: int) -> int:
+    """Per-worker chunk of the last axis, padded so w·chunk ≥ n_last, %32==0."""
+    per = (n_last + w - 1) // w
+    return ((per + 31) // 32) * 32
+
+
+def init_agg_state(
+    strategy: str,
+    params,
+    *,
+    world: int = 1,
+    seed: int = 0,
+    error_dtype=jnp.float32,
+) -> AggState:
+    """Build the aggregation state matching ``strategy``.
+
+    ``world`` is the EF world size; the double-compression server error is
+    sharded by chunk — each worker holds one last-axis chunk per leaf.
+    """
+    zeros = lambda x: jnp.zeros(x.shape, error_dtype)
+    worker_error: Any = ()
+    server_error: Any = ()
+    if strategy in ("ef_allgather", "ef_alltoall"):
+        worker_error = jax.tree.map(zeros, params)
+    if strategy == "ef_alltoall":
+        def _server_chunk(x):
+            c = _chunk_last(x.shape[-1], world)
+            return jnp.zeros(x.shape[:-1] + (c,), error_dtype)
+
+        server_error = jax.tree.map(_server_chunk, params)
+    return AggState(
+        worker_error=worker_error,
+        server_error=server_error,
+        key=jax.random.PRNGKey(seed),
+        steps=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dense baseline
+# ---------------------------------------------------------------------------
+
+
+def dense_mean(updates, state: AggState, axis_names: AxisNames, comp=None):
+    out = jax.tree.map(lambda u: lax.pmean(u, axis_names), updates)
+    nbytes = 2 * 4 * sum(x.size for x in jax.tree.leaves(updates))  # ring AR ≈ 2·d·4B
+    info = AggInfo(
+        wire_bytes_per_device=jnp.float32(nbytes),
+        mean_density=jnp.float32(1.0),
+    )
+    return out, state._replace(steps=state.steps + 1), info
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _decode_mean_fori(gathered: SignPayload, shape, w: int) -> jax.Array:
+    """mean_w scale_w·signs_w with two live buffers (no (W, leaf) blowup)."""
+    last = shape[-1]
+
+    def body(i, acc):
+        words = lax.dynamic_index_in_dim(gathered.words, i, axis=0, keepdims=False)
+        scale = lax.dynamic_index_in_dim(gathered.scale, i, axis=0, keepdims=False)
+        return acc + scale * unpack_signs_last(words, last).reshape(shape)
+
+    acc = lax.fori_loop(0, w, body, jnp.zeros(shape, jnp.float32))
+    return acc / w
+
+
+def _generic_roundtrip(comp, p, key):
+    flat = p.reshape(-1)
+    payload = comp.compress(flat, key=key)
+    return payload, comp.decompress(payload, flat.shape[0]).reshape(p.shape)
+
+
+# ---------------------------------------------------------------------------
+# paper-faithful multi-worker EF: compress → all-gather → decompress → mean
+# ---------------------------------------------------------------------------
+
+
+def ef_allgather(
+    updates,
+    state: AggState,
+    axis_names: AxisNames,
+    comp: Compressor | None = None,
+):
+    comp = comp or ScaledSignCompressor()
+    is_sign = isinstance(comp, _SIGN_TYPES)
+    key, sub = jax.random.split(state.key)
+    leaves, treedef = jax.tree.flatten(updates)
+    errs = jax.tree.leaves(state.worker_error)
+    keys = (
+        list(jax.random.split(sub, len(leaves)))
+        if not comp.deterministic
+        else [None] * len(leaves)
+    )
+    w = _axis_size(axis_names)
+
+    outs, new_errs, dens, bits = [], [], [], 0
+    for u, e, k in zip(leaves, errs, keys):
+        p = u.astype(e.dtype) + e
+        dens.append(density(p))
+        if is_sign:
+            payload = sign_encode(p, scaled=isinstance(comp, ScaledSignCompressor))
+            delta_local = sign_decode(payload, p.shape)
+            gathered = lax.all_gather(payload, axis_names, tiled=False)
+            mean = _decode_mean_fori(gathered, p.shape, w)
+        else:
+            payload, delta_local = _generic_roundtrip(comp, p, k)
+            gathered = lax.all_gather(payload, axis_names, tiled=False)
+            n = u.size
+            delta_all = jax.vmap(lambda pl: comp.decompress(pl, n))(gathered)
+            mean = jnp.mean(delta_all, axis=0).reshape(p.shape)
+        new_errs.append((p - delta_local).astype(e.dtype))
+        outs.append(mean.astype(u.dtype))
+        bits += comp.wire_bits(u.size)
+
+    info = AggInfo(
+        wire_bytes_per_device=jnp.float32((w - 1) * bits / 8.0),
+        mean_density=lax.pmean(jnp.mean(jnp.stack(dens)), axis_names),
+    )
+    new_state = AggState(
+        worker_error=jax.tree.unflatten(treedef, new_errs),
+        server_error=state.server_error,
+        key=key,
+        steps=state.steps + 1,
+    )
+    return jax.tree.unflatten(treedef, outs), new_state, info
+
+
+# ---------------------------------------------------------------------------
+# beyond paper: all-to-all double compression (W-independent 32×)
+# ---------------------------------------------------------------------------
+
+
+def ef_alltoall(
+    updates,
+    state: AggState,
+    axis_names: AxisNames,
+    comp: Compressor | None = None,
+):
+    comp = comp or ScaledSignCompressor()
+    if not isinstance(comp, _SIGN_TYPES):
+        raise ValueError("ef_alltoall supports sign compressors (wire format)")
+    scaled = isinstance(comp, ScaledSignCompressor)
+    w = _axis_size(axis_names)
+    leaves, treedef = jax.tree.flatten(updates)
+    errs = jax.tree.leaves(state.worker_error)
+    srv = jax.tree.leaves(state.server_error)
+
+    outs, new_errs, new_srv, dens, bits = [], [], [], [], 0
+    for u, e, se in zip(leaves, errs, srv):
+        p = u.astype(e.dtype) + e
+        dens.append(density(p))
+        last = p.shape[-1]
+        c = _chunk_last(last, w)  # == se.shape[-1]
+        pp = jnp.pad(p, [(0, 0)] * (p.ndim - 1) + [(0, w * c - last)])
+        # chunks on a leading axis: (w, ..., c)
+        chunks = jnp.moveaxis(pp.reshape(*p.shape[:-1], w, c), -2, 0)
+
+        # 1) per-chunk compression at the worker
+        def enc(x):
+            return sign_encode(x, scaled=scaled)
+
+        payload = jax.vmap(enc)(chunks)  # words (w, ..., m), scale (w,)
+        delta_chunks = jax.vmap(lambda pl: sign_decode(pl, chunks.shape[1:]))(payload)
+        delta_local = jnp.moveaxis(delta_chunks, 0, -2).reshape(*p.shape[:-1], w * c)
+        delta_local = delta_local[..., :last]
+        new_errs.append((p - delta_local).astype(e.dtype))
+
+        # 2) all-to-all: worker j receives chunk j from every worker
+        routed = jax.tree.map(
+            lambda x: lax.all_to_all(x, axis_names, split_axis=0, concat_axis=0, tiled=True),
+            payload,
+        )
+        s_j = _decode_mean_fori(routed, chunks.shape[1:], w)  # mean over workers
+
+        # 3) server-side EF re-compression of the mean
+        q_in = s_j + se
+        q_payload = sign_encode(q_in, scaled=scaled)
+        q_delta = sign_decode(q_payload, q_in.shape)
+        new_srv.append((q_in - q_delta).astype(se.dtype))
+
+        # 4) all-gather the re-compressed chunk payloads; decode locally
+        gathered = lax.all_gather(q_payload, axis_names, tiled=False)  # (w, ..., m)
+
+        def body(i, acc):
+            words = lax.dynamic_index_in_dim(gathered.words, i, axis=0, keepdims=False)
+            scale = lax.dynamic_index_in_dim(gathered.scale, i, axis=0, keepdims=False)
+            chunk = scale * unpack_signs_last(words, c).reshape(q_in.shape)
+            return lax.dynamic_update_index_in_dim(acc, chunk, i, axis=0)
+
+        full = lax.fori_loop(0, w, body, jnp.zeros((w,) + q_in.shape, jnp.float32))
+        out = jnp.moveaxis(full, 0, -2).reshape(*p.shape[:-1], w * c)[..., :last]
+        outs.append(out.astype(u.dtype))
+
+        leaf_rows = math.prod(p.shape[:-1]) if p.ndim > 1 else 1
+        chunk_bits = leaf_rows * (packed_len(c) * 32) + 32
+        # a2a: recv (w−1) chunks; ag: recv (w−1) chunks
+        bits += 2 * (w - 1) * chunk_bits
+
+    info = AggInfo(
+        wire_bytes_per_device=jnp.float32(bits / 8.0),
+        mean_density=lax.pmean(jnp.mean(jnp.stack(dens)), axis_names),
+    )
+    new_state = AggState(
+        worker_error=jax.tree.unflatten(treedef, new_errs),
+        server_error=jax.tree.unflatten(treedef, new_srv),
+        key=state.key,
+        steps=state.steps + 1,
+    )
+    return jax.tree.unflatten(treedef, outs), new_state, info
+
+
+# ---------------------------------------------------------------------------
+# majority vote (no EF) — the brittle baseline
+# ---------------------------------------------------------------------------
+
+
+def majority_vote(updates, state: AggState, axis_names: AxisNames, comp=None):
+    """x ← x − γ·sign(Σᵢ sign(gᵢ)) — signSGD with majority vote."""
+
+    def _vote(u):
+        s = jnp.where(u >= 0, 1.0, -1.0).astype(jnp.float32)
+        tot = lax.psum(s, axis_names)
+        return jnp.where(tot >= 0, 1.0, -1.0).astype(u.dtype)
+
+    out = jax.tree.map(_vote, updates)
+    d = sum(x.size for x in jax.tree.leaves(updates))
+    w = _axis_size(axis_names)
+    # in practice: all-gather of d-bit payloads + local vote
+    info = AggInfo(
+        wire_bytes_per_device=jnp.float32((w - 1) * d / 8.0),
+        mean_density=jnp.float32(1.0),
+    )
+    return out, state._replace(steps=state.steps + 1), info
+
+
+STRATEGIES = {
+    "dense": dense_mean,
+    "ef_allgather": ef_allgather,
+    "ef_alltoall": ef_alltoall,
+    "majority_vote": majority_vote,
+}
+
+
+def aggregate(strategy: str, updates, state: AggState, axis_names: AxisNames, comp=None):
+    fn = STRATEGIES.get(strategy)
+    if fn is None:
+        raise ValueError(f"unknown aggregation strategy {strategy!r}")
+    return fn(updates, state, axis_names, comp)

@@ -1,0 +1,546 @@
+"""Gradient compression operators (paper Assumption A).
+
+A compressor is a map ``C: R^d -> R^d`` that is *δ-approximate over Q*:
+
+    ||C(x) - x||²₂ ≤ (1 - δ) ||x||²₂     ∀ x ∈ Q,  δ ∈ (0, 1].
+
+We additionally expose the *wire format* — the fixed-shape payload that a
+worker would actually transmit — because this framework implements the
+distributed aggregation path (dense all-reduce vs compressed all-gather vs
+all-to-all double compression) explicitly, and the roofline accounting needs
+exact on-the-wire byte counts.
+
+Design rules:
+  * compressors act on flattened 1-D vectors; `tree_api.py`-style helpers in
+    this module lift them leaf-wise over pytrees (the paper's "layer-wise"
+    compression, §6.1);
+  * compress/decompress are pure, jit-safe, fixed shape (static `n`);
+  * each compressor knows its guaranteed δ (or reports the data-dependent
+    density φ for the scaled-sign operator, Lemma 8);
+  * randomized compressors (random-k, QSGD) take an explicit PRNG key and
+    satisfy Assumption A in expectation (allowed by the paper).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# sign bit packing (wire format shared with the Pallas kernel in repro.kernels)
+# ---------------------------------------------------------------------------
+
+PACK_WIDTH = 32
+
+
+def packed_len(n: int) -> int:
+    return (n + PACK_WIDTH - 1) // PACK_WIDTH
+
+
+def pack_signs(x: Array) -> Array:
+    """Pack ``sign(x) ∈ {-1,+1}`` of a 1-D vector into uint32 words.
+
+    Convention: bit = 1 ⟺ x ≥ 0 (the paper's sign operator with sign(0)=+1).
+    Padding bits (beyond n) are zero.
+    """
+    n = x.shape[0]
+    m = packed_len(n)
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = jnp.pad(bits, (0, m * PACK_WIDTH - n))
+    bits = bits.reshape(m, PACK_WIDTH)
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    # disjoint bit positions — plain sum assembles the word
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs(words: Array, n: int) -> Array:
+    """Inverse of :func:`pack_signs`; returns ±1 float32 of length ``n``."""
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(-1)[:n]
+    return 2.0 * bits.astype(jnp.float32) - 1.0
+
+
+def pack_signs_last(x: Array) -> Array:
+    """ND bit-packing along the LAST axis only.
+
+    Keeps every leading dim intact so GSPMD shardings on those dims survive —
+    flattening a (data×model)-sharded 28.9G-element leaf to 1-D forces XLA to
+    replicate it (observed: ~6 TB/device on the 398B config). Last dim is
+    padded to a multiple of 32; padding bits are zero.
+    """
+    last = x.shape[-1]
+    m = packed_len(last)
+    bits = (x >= 0).astype(jnp.uint32)
+    bits = jnp.pad(bits, [(0, 0)] * (x.ndim - 1) + [(0, m * PACK_WIDTH - last)])
+    bits = bits.reshape(*x.shape[:-1], m, PACK_WIDTH)
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs_last(words: Array, last: int) -> Array:
+    """Inverse of :func:`pack_signs_last`: (..., m) u32 → (..., last) ±1 f32."""
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * PACK_WIDTH)
+    return 2.0 * bits[..., :last].astype(jnp.float32) - 1.0
+
+
+def sign_encode(x: Array, scaled: bool = True, fixed_scale: float = 1.0) -> "SignPayload":
+    """ND wire encoding of (scaled) sign: last-axis-packed words + fp32 scale."""
+    xf = x.astype(jnp.float32)
+    if scaled:
+        scale = jnp.sum(jnp.abs(xf)) / float(x.size)
+    else:
+        scale = jnp.float32(fixed_scale)
+    return SignPayload(words=pack_signs_last(xf), scale=scale)
+
+
+def sign_decode(payload: "SignPayload", shape) -> Array:
+    return payload.scale * unpack_signs_last(payload.words, shape[-1]).reshape(shape)
+
+
+def density(v: Array) -> Array:
+    """φ(v) = ||v||₁² / (d ||v||₂²) — Lemma 8's compression quality of scaled sign.
+
+    Any rank; NO flatten — ``reshape(-1)`` of a (data×model)-sharded leaf
+    forces XLA to replicate it (~3 TiB/device on the 398B multi-pod path),
+    and reductions don't need it."""
+    vf = v.astype(jnp.float32)
+    l1 = jnp.sum(jnp.abs(vf))
+    l2sq = jnp.sum(vf * vf)
+    return jnp.where(l2sq > 0, l1 * l1 / (float(v.size) * l2sq), jnp.float32(1.0))
+
+
+# ---------------------------------------------------------------------------
+# payloads
+# ---------------------------------------------------------------------------
+
+
+class SignPayload(NamedTuple):
+    """Wire format of (scaled) sign compression: d bits + one fp32 scale."""
+
+    words: Array  # uint32 (ceil(n/32),)
+    scale: Array  # float32 scalar; ||p||₁/d for scaled sign, γ for unscaled
+
+
+class BlockSignPayload(NamedTuple):
+    words: Array  # uint32 (nblocks, words_per_block)
+    scale: Array  # float32 (nblocks,)
+
+
+class TopKPayload(NamedTuple):
+    values: Array  # float32 (k,)
+    indices: Array  # int32 (k,)
+
+
+class QuantPayload(NamedTuple):
+    """QSGD-style stochastic quantization: sign·level/s · ||x||₂."""
+
+    levels: Array  # int8 (n,), signed level in [-s, s]
+    norm: Array  # float32 scalar
+
+
+class LowRankPayload(NamedTuple):
+    p: Array  # (rows, rank)
+    q: Array  # (cols, rank)
+
+
+class DensePayload(NamedTuple):
+    x: Array
+
+
+# ---------------------------------------------------------------------------
+# compressor base
+# ---------------------------------------------------------------------------
+
+
+class Compressor(abc.ABC):
+    """δ-approximate compressor over flat vectors with an explicit wire format."""
+
+    name: str = "compressor"
+
+    @abc.abstractmethod
+    def compress(self, x: Array, *, key: Array | None = None) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def decompress(self, payload: Any, n: int) -> Array:
+        ...
+
+    def roundtrip(self, x: Array, *, key: Array | None = None) -> Array:
+        """Δ = decompress(compress(x)) — what EF subtracts to form the error."""
+        return self.decompress(self.compress(x, key=key), x.shape[0])
+
+    def apply(self, x: Array, *, key: Array | None = None) -> Array:
+        """Shape/sharding-preserving Δ = C(x) for arbitrary-rank ``x``.
+
+        Used by the single-worker EF optimizer path where no wire payload is
+        needed. Default flattens (fine for small leaves / 1-D); sign-type
+        compressors override with a fully elementwise version so fsdp-sharded
+        leaves are never reshaped.
+        """
+        flat = x.reshape(-1).astype(jnp.float32)
+        return self.roundtrip(flat, key=key).reshape(x.shape).astype(x.dtype)
+
+    @abc.abstractmethod
+    def wire_bits(self, n: int) -> int:
+        """Bits actually transmitted for an n-element tensor."""
+
+    def delta(self, n: int) -> float | None:
+        """Guaranteed δ of Assumption A if known a-priori, else None."""
+        return None
+
+    @property
+    def deterministic(self) -> bool:
+        return True
+
+
+# ---------------------------------------------------------------------------
+# concrete compressors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledSignCompressor(Compressor):
+    """The paper's EF-SIGNSGD operator: C(v) = (||v||₁/d)·sign(v)  (Lemma 8).
+
+    δ is data-dependent: δ = φ(v) = ||v||₁²/(d ||v||₂²) ∈ [1/d, 1].
+    """
+
+    name: str = "scaled_sign"
+
+    def compress(self, x: Array, *, key=None) -> SignPayload:
+        x = x.astype(jnp.float32)
+        scale = jnp.sum(jnp.abs(x)) / float(x.shape[0])
+        return SignPayload(words=pack_signs(x), scale=scale)
+
+    def decompress(self, payload: SignPayload, n: int) -> Array:
+        return payload.scale * unpack_signs(payload.words, n)
+
+    def wire_bits(self, n: int) -> int:
+        return packed_len(n) * PACK_WIDTH + 32
+
+    def delta(self, n: int) -> float:
+        return 1.0 / n  # worst case; realized δ is density(v) (Lemma 8)
+
+    def apply(self, x: Array, *, key=None) -> Array:
+        # elementwise, any rank — preserves shardings (no reshape)
+        xf = x.astype(jnp.float32)
+        scale = jnp.sum(jnp.abs(xf)) / float(x.size)
+        return (scale * jnp.where(xf >= 0, 1.0, -1.0)).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class UnscaledSignCompressor(Compressor):
+    """Plain sign with a fixed scale — NOT a δ-approximate compressor.
+
+    Included to reproduce the paper's counterexamples (SIGNSGD proper). With
+    ``scale=s`` the update is s·sign(v).
+    """
+
+    scale: float = 1.0
+    name: str = "sign"
+
+    def compress(self, x: Array, *, key=None) -> SignPayload:
+        return SignPayload(words=pack_signs(x), scale=jnp.float32(self.scale))
+
+    def decompress(self, payload: SignPayload, n: int) -> Array:
+        return payload.scale * unpack_signs(payload.words, n)
+
+    def wire_bits(self, n: int) -> int:
+        return packed_len(n) * PACK_WIDTH
+
+    def apply(self, x: Array, *, key=None) -> Array:
+        return (self.scale * jnp.where(x >= 0, 1.0, -1.0)).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockScaledSignCompressor(Compressor):
+    """Beyond-paper: scaled sign with a per-block L1 scale.
+
+    Per-block scaling raises the effective δ from the *global* density φ(v) to
+    the worst per-block density — helpful when leaves mix dense and near-zero
+    regions (e.g. sparsely-routed expert gradients). Wire cost: one extra fp32
+    per block.
+    """
+
+    block: int = 4096
+    name: str = "block_scaled_sign"
+
+    def compress(self, x: Array, *, key=None) -> BlockSignPayload:
+        x = x.astype(jnp.float32)
+        n = x.shape[0]
+        nb = (n + self.block - 1) // self.block
+        xp = jnp.pad(x, (0, nb * self.block - n)).reshape(nb, self.block)
+        # padded tail contributes 0 to the L1 sum; divide by true block sizes
+        sizes = jnp.minimum(
+            jnp.full((nb,), self.block, jnp.float32),
+            n - jnp.arange(nb, dtype=jnp.float32) * self.block,
+        )
+        scale = jnp.sum(jnp.abs(xp), axis=-1) / sizes
+        words = jax.vmap(pack_signs)(xp)
+        return BlockSignPayload(words=words, scale=scale)
+
+    def decompress(self, payload: BlockSignPayload, n: int) -> Array:
+        nb, wpb = payload.words.shape
+        signs = jax.vmap(lambda w: unpack_signs(w, self.block))(payload.words)
+        full = (payload.scale[:, None] * signs).reshape(-1)[:n]
+        # zero out padding-region signs beyond n is handled by the slice
+        return full
+
+    def wire_bits(self, n: int) -> int:
+        nb = (n + self.block - 1) // self.block
+        return nb * (self.block + 32)
+
+    def delta(self, n: int) -> float:
+        return 1.0 / min(n, self.block)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """top-k magnitude sparsification (Lin et al. '18; Stich et al. '18).
+
+    δ = k/d (Remark 7: top-1 is a 1/d-approximate compressor → EF-SGD becomes
+    a convergent greedy coordinate method).
+    """
+
+    k: int = 64
+    name: str = "top_k"
+
+    def _k(self, n: int) -> int:
+        return max(1, min(self.k, n))
+
+    def compress(self, x: Array, *, key=None) -> TopKPayload:
+        x = x.astype(jnp.float32)
+        k = self._k(x.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        return TopKPayload(values=x[idx], indices=idx.astype(jnp.int32))
+
+    def decompress(self, payload: TopKPayload, n: int) -> Array:
+        out = jnp.zeros((n,), jnp.float32)
+        return out.at[payload.indices].set(payload.values)
+
+    def wire_bits(self, n: int) -> int:
+        return self._k(n) * (32 + 32)
+
+    def delta(self, n: int) -> float:
+        return self._k(n) / n
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomKCompressor(Compressor):
+    """Uniform random-k sparsification; δ = k/d in expectation."""
+
+    k: int = 64
+    rescale: bool = False  # True → unbiased (×d/k), pair with EF per Remark 5
+    name: str = "random_k"
+
+    def _k(self, n: int) -> int:
+        return max(1, min(self.k, n))
+
+    def compress(self, x: Array, *, key=None) -> TopKPayload:
+        assert key is not None, "random_k requires a PRNG key"
+        x = x.astype(jnp.float32)
+        n = x.shape[0]
+        k = self._k(n)
+        idx = jax.random.choice(key, n, shape=(k,), replace=False).astype(jnp.int32)
+        vals = x[idx]
+        if self.rescale:
+            vals = vals * (n / k)
+        return TopKPayload(values=vals, indices=idx)
+
+    def decompress(self, payload: TopKPayload, n: int) -> Array:
+        out = jnp.zeros((n,), jnp.float32)
+        return out.at[payload.indices].set(payload.values)
+
+    def wire_bits(self, n: int) -> int:
+        return self._k(n) * (32 + 32)
+
+    def delta(self, n: int) -> float | None:
+        # expectation-δ = k/n when not rescaled; rescaled (unbiased) variant is
+        # used with EF per Remark 5 and has no a-priori Assumption-A δ.
+        return None if self.rescale else self._k(n) / n
+
+    @property
+    def deterministic(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCompressor(Compressor):
+    """QSGD stochastic quantization (Alistarh et al. '17), s uniform levels.
+
+    Unbiased with variance bound E||U(x)||² ≤ k||x||², k = 1 + min(√d/s, d/s²).
+    Per Remark 5, we expose ``ef_scaled=True`` which emits U(x)/k so that the
+    operator becomes a (1 - 1/k)… i.e. 1/k-approximate compressor suitable for
+    error feedback, pushing the k-slowdown into the O(1/T) term.
+    """
+
+    s: int = 15  # levels → 4-bit magnitudes + sign (int8 on the wire here)
+    ef_scaled: bool = True
+    name: str = "qsgd"
+
+    def _k_factor(self, n: int) -> float:
+        return 1.0 + min(math.sqrt(n) / self.s, n / (self.s * self.s))
+
+    def compress(self, x: Array, *, key=None) -> QuantPayload:
+        assert key is not None, "qsgd requires a PRNG key"
+        x = x.astype(jnp.float32)
+        norm = jnp.linalg.norm(x)
+        safe = jnp.where(norm > 0, norm, 1.0)
+        y = jnp.abs(x) / safe * self.s
+        low = jnp.floor(y)
+        prob = y - low
+        u = jax.random.uniform(key, x.shape)
+        mag = low + (u < prob)
+        levels = (jnp.sign(x) * mag).astype(jnp.int8)
+        return QuantPayload(levels=levels, norm=norm)
+
+    def decompress(self, payload: QuantPayload, n: int) -> Array:
+        out = payload.norm * payload.levels.astype(jnp.float32) / self.s
+        if self.ef_scaled:
+            out = out / self._k_factor(n)
+        return out
+
+    def wire_bits(self, n: int) -> int:
+        bits_per = max(1, math.ceil(math.log2(2 * self.s + 1)))
+        return n * bits_per + 32
+
+    def delta(self, n: int) -> float | None:
+        if self.ef_scaled:
+            return 1.0 / self._k_factor(n)
+        return None
+
+    @property
+    def deterministic(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankCompressor(Compressor):
+    """Rank-r approximation via subspace (power) iteration — the paper's
+    "k-PCA" example (Wang et al. '18 ATOMO / spectral-ATOMO family).
+
+    Operates on a matrix view (rows, cols) of the flat vector: rows is chosen
+    as the largest divisor of n that is ≤ √n (cheap static heuristic), so any
+    leaf can be compressed. Deterministic given the fixed seed iterate.
+    """
+
+    rank: int = 4
+    iters: int = 2
+    name: str = "low_rank"
+
+    @staticmethod
+    def _shape(n: int) -> tuple[int, int]:
+        r = int(math.isqrt(n))
+        while r > 1 and n % r != 0:
+            r -= 1
+        return (r, n // r)
+
+    def compress(self, x: Array, *, key=None) -> LowRankPayload:
+        x = x.astype(jnp.float32)
+        n = x.shape[0]
+        rows, cols = self._shape(n)
+        m = x.reshape(rows, cols)
+        r = max(1, min(self.rank, rows, cols))
+        # deterministic start (shared across workers → no key needed)
+        q = jnp.linalg.qr(
+            jax.random.normal(jax.random.PRNGKey(0), (cols, r), jnp.float32)
+        )[0]
+        for _ in range(self.iters):
+            p = m @ q  # (rows, r)
+            p = jnp.linalg.qr(p)[0]
+            q = m.T @ p  # (cols, r)
+        return LowRankPayload(p=p, q=q)
+
+    def decompress(self, payload: LowRankPayload, n: int) -> Array:
+        return (payload.p @ payload.q.T).reshape(-1)[:n]
+
+    def wire_bits(self, n: int) -> int:
+        rows, cols = self._shape(n)
+        r = max(1, min(self.rank, rows, cols))
+        return 32 * r * (rows + cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor(Compressor):
+    """δ = 1 (no compression) — the dense baseline in compressed codepaths."""
+
+    name: str = "identity"
+
+    def compress(self, x: Array, *, key=None) -> DensePayload:
+        return DensePayload(x=x.astype(jnp.float32))
+
+    def decompress(self, payload: DensePayload, n: int) -> Array:
+        return payload.x
+
+    def wire_bits(self, n: int) -> int:
+        return 32 * n
+
+    def delta(self, n: int) -> float:
+        return 1.0
+
+
+# ---------------------------------------------------------------------------
+# pytree lifting (the paper's layer-wise compression)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_keys(key: Array | None, tree) -> Any:
+    if key is None:
+        return jax.tree.map(lambda _: None, tree)
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = list(jax.random.split(key, len(leaves)))
+    return jax.tree.unflatten(treedef, keys)
+
+
+def compress_tree(comp: Compressor, tree, *, key: Array | None = None):
+    """Apply ``comp`` leaf-wise; returns a pytree of payloads."""
+    keys = _leaf_keys(key, tree)
+    return jax.tree.map(
+        lambda x, k: comp.compress(x.reshape(-1), key=k),
+        tree,
+        keys,
+        is_leaf=lambda x: isinstance(x, jax.Array),
+    )
+
+
+def roundtrip_tree(comp: Compressor, tree, *, key: Array | None = None):
+    """Δ-tree = decompress(compress(leaf)) for every leaf, reshaped back."""
+    keys = _leaf_keys(key, tree)
+
+    def _rt(x, k):
+        flat = x.reshape(-1).astype(jnp.float32)
+        return comp.roundtrip(flat, key=k).reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(_rt, tree, keys, is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def tree_wire_bits(comp: Compressor, tree) -> int:
+    """Exact per-step transmission cost (paper §6.1's Σᵢ(dᵢ + 32) accounting)."""
+    return sum(comp.wire_bits(x.size) for x in jax.tree.leaves(tree))
+
+
+def get_compressor(name: str, **kw) -> Compressor:
+    table = {
+        "scaled_sign": ScaledSignCompressor,
+        "sign": UnscaledSignCompressor,
+        "block_scaled_sign": BlockScaledSignCompressor,
+        "top_k": TopKCompressor,
+        "random_k": RandomKCompressor,
+        "qsgd": QSGDCompressor,
+        "low_rank": LowRankCompressor,
+        "identity": IdentityCompressor,
+    }
+    if name not in table:
+        raise ValueError(f"unknown compressor {name!r}; options: {sorted(table)}")
+    return table[name](**kw)

@@ -1,0 +1,100 @@
+"""Error feedback (the paper's core contribution, Algorithms 1 & 2).
+
+Single-worker EF-SGD (Algorithm 2):
+
+    p_t     = γ g_t + e_t          # error correction
+    Δ_t     = C(p_t)               # compression
+    x_{t+1} = x_t − Δ_t            # iterate update
+    e_{t+1} = p_t − Δ_t            # residual memory
+
+We expose this as a composable *gradient transform* (optax-style) so it chains
+with momentum / weight decay / LR schedules, and as raw per-leaf steps used by
+the distributed aggregation paths in :mod:`repro.core.aggregation`.
+
+Conventions: the transform consumes *descent updates* ``u_t`` (i.e. already
+scaled by −γ, weight decay applied, etc.) and emits the compressed update
+``−Δ_t`` with the same sign convention — algebraically identical to the paper
+with p_t = −u_t accounting.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor, compress_tree, density
+
+
+class EFState(NamedTuple):
+    error: Any  # pytree matching params: the residual e_t
+    key: jax.Array  # PRNG state for randomized compressors
+    steps: jax.Array  # int32 counter
+
+
+def init_ef_state(params, key: jax.Array | None = None, dtype=None) -> EFState:
+    err = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or jnp.result_type(x.dtype, jnp.float32)),
+        params,
+    )
+    return EFState(
+        error=err,
+        key=key if key is not None else jax.random.PRNGKey(0),
+        steps=jnp.int32(0),
+    )
+
+
+def ef_leaf_step(comp: Compressor, p_flat: jax.Array, *, key=None):
+    """One EF compression on a flat corrected step p: returns (Δ, e_new, payload)."""
+    payload = comp.compress(p_flat, key=key)
+    delta = comp.decompress(payload, p_flat.shape[0])
+    return delta, p_flat - delta, payload
+
+
+def ef_step(comp: Compressor, updates, state: EFState):
+    """Leaf-wise EF over a pytree of (already −γ-scaled) updates.
+
+    Returns (compressed_updates, new_state). The compression is applied to
+    ``p = updates + error`` per leaf via ``comp.apply`` — shape- and
+    sharding-preserving (sign compressors are fully elementwise; no reshapes
+    of fsdp-sharded leaves).
+    """
+    key, sub = jax.random.split(state.key)
+    leaves, treedef = jax.tree.flatten(updates)
+    err_leaves = jax.tree.leaves(state.error)
+    keys = list(jax.random.split(sub, len(leaves))) if not comp.deterministic else [None] * len(leaves)
+
+    outs, errs = [], []
+    for u, e, k in zip(leaves, err_leaves, keys):
+        p = u.astype(e.dtype) + e
+        delta = comp.apply(p, key=k).astype(e.dtype)
+        outs.append(delta.astype(u.dtype))
+        errs.append(p - delta)
+
+    new_state = EFState(
+        error=jax.tree.unflatten(treedef, errs),
+        key=key,
+        steps=state.steps + 1,
+    )
+    return jax.tree.unflatten(treedef, outs), new_state
+
+
+def error_norm_sq(state: EFState) -> jax.Array:
+    """‖e_t‖²₂ over the whole pytree — the quantity bounded by Lemma 3."""
+    sq = jax.tree.map(lambda e: jnp.sum(e.astype(jnp.float32) ** 2), state.error)
+    return sum(jax.tree.leaves(sq), start=jnp.float32(0.0))
+
+
+def lemma3_bound(gamma: float, sigma_sq: float, delta: float) -> float:
+    """Paper Lemma 3: E‖e_t‖² ≤ 4(1−δ)γ²σ²/δ²."""
+    return 4.0 * (1.0 - delta) * gamma * gamma * sigma_sq / (delta * delta)
+
+
+def corrected_density(updates, state: EFState):
+    """Per-leaf density φ(g_t + e_t) (Fig 2 — what actually governs δ)."""
+    return jax.tree.map(
+        lambda u, e: density(u.reshape(-1).astype(jnp.float32) + e.reshape(-1)),
+        updates,
+        state.error,
+    )

@@ -1,0 +1,303 @@
+"""Optimizer substrate (optax is not available offline — this is our own).
+
+`Transform` mirrors optax's GradientTransformation: ``init(params) -> state``
+and ``update(updates, state, params) -> (updates, state)``. Updates flowing
+through a chain are *descent directions*; `apply_updates` adds them.
+
+Algorithms (paper §6.1):
+  * ``sgd(lr, momentum)``                      — SGDM baseline
+  * ``signsgd(lr, scaled=True)``               — (scaled) SIGNSGD
+  * ``signum(lr, beta)``                       — SIGNSGDM, m ← g + βm  (paper's def)
+  * ``adam(lr, ...)``                          — for the ADAM≈sign connection
+  * ``ef_sgd(lr, compressor, momentum=0)``     — EF-SGD / EF-SIGNSGD (Alg. 1/2)
+
+Schedules: constant, paper's step decimation (/10 at 50%/75% of training),
+cosine, linear warmup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor, ScaledSignCompressor, density
+from repro.core.error_feedback import EFState, ef_step, init_ef_state
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Transform(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (updates, state, params) -> (updates, state)
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def chain(*transforms: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def identity() -> Transform:
+    return Transform(lambda p: EmptyState(), lambda u, s, p=None: (u, s))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay_schedule(lr: float, total_steps: int, decays=(0.5, 0.75), factor=0.1) -> Schedule:
+    """The paper's schedule: decimate at 100 and 150 of 200 epochs."""
+
+    boundaries = jnp.asarray([int(d * total_steps) for d in decays])
+
+    def sched(step):
+        k = jnp.sum(step >= boundaries)
+        return jnp.float32(lr) * jnp.float32(factor) ** k
+
+    return sched
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0, final_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(1.0, warmup))
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total_steps - warmup), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * warm * cos
+
+    return sched
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# basic blocks
+# ---------------------------------------------------------------------------
+
+
+class ScaleByLrState(NamedTuple):
+    step: jax.Array
+
+
+def scale_by_neg_lr(lr) -> Transform:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ScaleByLrState(step=jnp.int32(0))
+
+    def update(updates, state, params=None):
+        g = sched(state.step)
+        return (
+            jax.tree.map(lambda u: -g * u, updates),
+            ScaleByLrState(step=state.step + 1),
+        )
+
+    return Transform(init, update)
+
+
+def add_weight_decay(wd: float) -> Transform:
+    """g ← g + wd·x (the paper leaves wd = 5e-4 for all methods)."""
+
+    def update(updates, state, params=None):
+        if wd == 0.0 or params is None:
+            return updates, state
+        return (
+            jax.tree.map(lambda u, x: u + wd * x.astype(u.dtype), updates, params),
+            state,
+        )
+
+    return Transform(lambda p: EmptyState(), update)
+
+
+class TraceState(NamedTuple):
+    momentum: Any
+
+
+def trace(beta: float, nesterov: bool = False) -> Transform:
+    """Heavy-ball momentum m ← βm + g (pytorch-style, as in the paper's SGDM)."""
+
+    def init(params):
+        return TraceState(jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params))
+
+    def update(updates, state, params=None):
+        m = jax.tree.map(lambda mm, u: beta * mm + u.astype(jnp.float32), state.momentum, updates)
+        out = jax.tree.map(lambda mm, u: (u.astype(jnp.float32) + beta * mm) if nesterov else mm, m, updates)
+        out = jax.tree.map(lambda o, u: o.astype(u.dtype), out, updates)
+        return out, TraceState(m)
+
+    return Transform(init, update)
+
+
+def sign_transform(scaled: bool) -> Transform:
+    """u ← sign(u), or the scaled variant (‖u‖₁/d)·sign(u), leaf-wise."""
+
+    def _sign(u):
+        s = jnp.where(u >= 0, 1.0, -1.0).astype(jnp.float32)
+        if scaled:
+            s = s * (jnp.sum(jnp.abs(u.astype(jnp.float32))) / float(u.size))
+        return s.astype(u.dtype)
+
+    def update(updates, state, params=None):
+        return jax.tree.map(_sign, updates), state
+
+    return Transform(lambda p: EmptyState(), update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8) -> Transform:
+    def init(params):
+        z = lambda: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return AdamState(mu=z(), nu=z(), step=jnp.int32(0))
+
+    def update(updates, state, params=None):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, u: b1 * m + (1 - b1) * u.astype(jnp.float32), state.mu, updates)
+        nu = jax.tree.map(lambda v, u: b2 * v + (1 - b2) * u.astype(jnp.float32) ** 2, state.nu, updates)
+        t = step.astype(jnp.float32)
+        mh = jax.tree.map(lambda m: m / (1 - b1**t), mu)
+        nh = jax.tree.map(lambda v: v / (1 - b2**t), nu)
+        out = jax.tree.map(lambda m, v, u: (m / (jnp.sqrt(v) + eps)).astype(u.dtype), mh, nh, updates)
+        return out, AdamState(mu=mu, nu=nu, step=step)
+
+    return Transform(init, update)
+
+
+class EFTransformState(NamedTuple):
+    ef: EFState
+
+
+def ef_transform(compressor: Compressor, seed: int = 0, error_dtype=jnp.float32) -> Transform:
+    """Error-feedback compression of the (already −γ-scaled) update stream.
+
+    This is Algorithm 2 with p_t ≡ (incoming update) + e_t. Placed *after*
+    scale_by_neg_lr in a chain, the emitted update is −Δ_t and the residual is
+    exactly the paper's e_{t+1}.
+    """
+
+    def init(params):
+        return EFTransformState(
+            ef=init_ef_state(params, key=jax.random.PRNGKey(seed), dtype=error_dtype)
+        )
+
+    def update(updates, state, params=None):
+        out, ef = ef_step(compressor, updates, state.ef)
+        return out, EFTransformState(ef=ef)
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# user-facing optimizers
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False) -> Transform:
+    parts = [add_weight_decay(weight_decay)]
+    if momentum:
+        parts.append(trace(momentum, nesterov))
+    parts.append(scale_by_neg_lr(lr))
+    return chain(*parts)
+
+
+def signsgd(lr, scaled: bool = True, weight_decay: float = 0.0) -> Transform:
+    """(scaled) SIGNSGD: x ← x − γ (‖g‖₁/d)·sign(g)  [or plain sign]."""
+    return chain(add_weight_decay(weight_decay), sign_transform(scaled), scale_by_neg_lr(lr))
+
+
+def signum(lr, beta: float = 0.9, weight_decay: float = 0.0) -> Transform:
+    """SIGNSGDM (paper eqn): m ← g + βm; x ← x − γ sign(m)."""
+
+    class SignumState(NamedTuple):
+        momentum: Any
+        step: jax.Array
+
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return SignumState(
+            momentum=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            step=jnp.int32(0),
+        )
+
+    def update(updates, state, params=None):
+        if weight_decay and params is not None:
+            updates = jax.tree.map(lambda u, x: u + weight_decay * x.astype(u.dtype), updates, params)
+        m = jax.tree.map(lambda mm, u: u.astype(jnp.float32) + beta * mm, state.momentum, updates)
+        g = sched(state.step)
+        out = jax.tree.map(lambda mm, u: (-g * jnp.where(mm >= 0, 1.0, -1.0)).astype(u.dtype), m, updates)
+        return out, SignumState(momentum=m, step=state.step + 1)
+
+    return Transform(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay: float = 0.0) -> Transform:
+    return chain(add_weight_decay(weight_decay), scale_by_adam(b1, b2, eps), scale_by_neg_lr(lr))
+
+
+def ef_sgd(
+    lr,
+    compressor: Compressor | None = None,
+    momentum: float = 0.0,
+    weight_decay: float = 0.0,
+    seed: int = 0,
+    error_dtype=jnp.float32,
+) -> Transform:
+    """EF-SGD (Alg. 2) / EF-SIGNSGD (Alg. 1, the default compressor).
+
+    With ``momentum>0`` this is the 'momentum correction' flavor (Lin et al.
+    '18): EF wraps SGDM's update stream rather than vanilla SGD's.
+    """
+    comp = compressor if compressor is not None else ScaledSignCompressor()
+    parts = [add_weight_decay(weight_decay)]
+    if momentum:
+        parts.append(trace(momentum))
+    parts.append(scale_by_neg_lr(lr))
+    parts.append(ef_transform(comp, seed=seed, error_dtype=error_dtype))
+    return chain(*parts)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda x, u: (x + u.astype(x.dtype)) if x is not None else None, params, updates)
+
+
+def get_optimizer(name: str, lr, **kw) -> Transform:
+    table: dict[str, Callable[..., Transform]] = {
+        "sgd": sgd,
+        "sgdm": lambda lr, **k: sgd(lr, momentum=k.pop("momentum", 0.9), **k),
+        "signsgd": signsgd,
+        "signum": signum,
+        "adam": adam,
+        "ef_sgd": ef_sgd,
+        "ef_signsgd": ef_sgd,
+        "ef_sgdm": lambda lr, **k: ef_sgd(lr, momentum=k.pop("momentum", 0.9), **k),
+    }
+    if name not in table:
+        raise ValueError(f"unknown optimizer {name!r}; options: {sorted(table)}")
+    return table[name](lr, **kw)

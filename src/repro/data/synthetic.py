@@ -1,0 +1,121 @@
+"""Deterministic synthetic datasets.
+
+* token streams for LM training (structured enough that loss decreases),
+* the exact §5.2/A.6 over-parameterized least-squares generator (Wilson et
+  al.'17 construction) for the generalization experiments,
+* the A.1 sparse-noise quadratic,
+* a CIFAR-protocol proxy classification task (teacher-generated labels) for
+  the Fig-4/Table-1 style algorithm comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token pipeline
+# ---------------------------------------------------------------------------
+
+
+def token_batch(key, batch: int, seq: int, vocab: int, *, order: int = 2) -> dict:
+    """Markov-ish synthetic tokens: next token = affine function of previous
+    ``order`` tokens mod vocab, plus noise — learnable structure."""
+    k1, k2 = jax.random.split(key)
+    x = jax.random.randint(k1, (batch, seq + 1), 0, vocab)
+    # inject determinism: with prob .75 token t = (a·t-1 + b·t-2 + c) % vocab
+    a, b, c = 31, 17, 7
+    det = (a * x[:, :-2] + b * x[:, 1:-1] + c) % vocab
+    coin = jax.random.bernoulli(k2, 0.75, det.shape)
+    toks = x.at[:, 2:].set(jnp.where(coin, det, x[:, 2:]))
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def token_batches(seed: int, batch: int, seq: int, vocab: int) -> Iterator[dict]:
+    step = 0
+    while True:
+        yield token_batch(jax.random.PRNGKey(seed * 100_003 + step), batch, seq, vocab)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# §5.2 / Appendix A.6: Wilson et al. over-parameterized least squares
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WilsonData:
+    a_train: np.ndarray
+    y_train: np.ndarray
+    a_test: np.ndarray
+    y_test: np.ndarray
+
+
+def wilson_least_squares(seed: int = 0, n: int = 200, d_mult: int = 6) -> WilsonData:
+    """Exact A.6 construction: n=200 points, d=6n=1200 dims.
+
+    A[i,1]=y_i; A[i,2:4]=1; A[i, 4+5(i-1) .. 4+5(i-1)+2(1-y_i)] = 1 (1-indexed
+    in the paper; 0-indexed here), rest 0. Random 50/50 train/test split.
+    """
+    rng = np.random.default_rng(seed)
+    d = d_mult * n
+    y = rng.choice([-1.0, 1.0], size=n)
+    a = np.zeros((n, d), np.float64)
+    for i in range(n):
+        a[i, 0] = y[i]
+        a[i, 1] = 1.0
+        a[i, 2] = 1.0
+        start = 3 + 5 * i
+        width = 1 + int(2 * (1 - y[i]))  # y=+1 → 1 slot; y=−1 → 3 slots
+        a[i, start : start + width] = 1.0
+    perm = rng.permutation(n)
+    tr, te = perm[: n // 2], perm[n // 2 :]
+    return WilsonData(a[tr], y[tr], a[te], y[te])
+
+
+# ---------------------------------------------------------------------------
+# A.1 sparse-noise quadratic
+# ---------------------------------------------------------------------------
+
+
+def sparse_noise_grad(key, x: jax.Array, noise_std: float = 100.0) -> jax.Array:
+    """∇f(x)=x for f = ½‖x‖²; gaussian noise N(0, 100²) on coordinate 0 only."""
+    g = x
+    noise = noise_std * jax.random.normal(key, ())
+    return g.at[0].add(noise)
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-protocol proxy classification task
+# ---------------------------------------------------------------------------
+
+
+def proxy_classification(
+    seed: int = 0,
+    n_train: int = 4096,
+    n_test: int = 1024,
+    dim: int = 256,
+    classes: int = 10,
+    teacher_width: int = 64,
+    label_noise: float = 0.1,
+):
+    """Teacher-MLP-generated task with label noise: overfitting is possible
+    (train acc → 100%) while test acc separates optimizers — the property the
+    paper's Fig. 4 comparison relies on."""
+    rng = np.random.default_rng(seed)
+    w1 = rng.normal(size=(dim, teacher_width)) / np.sqrt(dim)
+    w2 = rng.normal(size=(teacher_width, classes)) / np.sqrt(teacher_width)
+    x = rng.normal(size=(n_train + n_test, dim)).astype(np.float32)
+    logits = np.tanh(x @ w1) @ w2
+    y = logits.argmax(-1)
+    flip = rng.random(len(y)) < label_noise
+    y[flip] = rng.integers(0, classes, flip.sum())
+    return (
+        (x[:n_train], y[:n_train].astype(np.int32)),
+        (x[n_train:], y[n_train:].astype(np.int32)),
+    )

@@ -1,0 +1,149 @@
+"""Pallas TPU kernels for fused error-feedback sign compression.
+
+The compression path (Alg. 1 lines 4-7) is purely memory-bound: every byte of
+gradient is read, signed, packed, and a residual written back. Composed from
+stock XLA ops this costs ≥4 HBM round-trips of the tensor (p = γg+e; |p| sum;
+sign+pack; e' = p−Δ). The kernels below fuse each stage into a single
+HBM→VMEM→HBM pass:
+
+  * ``l1_partial``          — per-row |γg+e| partial sums (reduction pass 1)
+  * ``ef_sign_compress``    — γg+e → packed sign words + new residual, fused
+  * ``sign_decompress_mean``— unpack W gathered payloads and average them
+
+Layout: flat tensors are viewed as (rows, 1024) f32; rows are tiled into
+VMEM blocks of BLOCK_ROWS×1024 (512 KiB per operand — three operands resident
+≈ 1.5 MiB, comfortably inside the ~16 MiB VMEM budget with double buffering).
+1024 lanes = 8×128 VPU tiles; the pack's reduction axis (32) stays in-register.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.py`` (tests sweep
+rows/dtypes); TPU (v5e) is the compile target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+WORDS_PER_ROW = LANE // 32
+BLOCK_ROWS = 128  # 128×1024 f32 = 512 KiB per operand block
+
+
+def _grid(rows: int, block_rows: int) -> int:
+    assert rows % block_rows == 0, (rows, block_rows)
+    return rows // block_rows
+
+
+# ---------------------------------------------------------------------------
+# pass 1: per-row L1 of p = γg + e
+# ---------------------------------------------------------------------------
+
+
+def _l1_partial_kernel(gamma_ref, g_ref, e_ref, out_ref):
+    gamma = gamma_ref[0]
+    p = gamma * g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(jnp.abs(p), axis=-1)
+
+
+def l1_partial(g, e, gamma, *, block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    rows = g.shape[0]
+    block_rows = min(block_rows, rows)
+    grid = (_grid(rows, block_rows),)
+    return pl.pallas_call(
+        _l1_partial_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # γ broadcast to every block
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=interpret,
+    )(gamma.reshape(1), g, e)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: fused sign + bitpack + residual update
+# ---------------------------------------------------------------------------
+
+
+def _ef_sign_kernel(gamma_ref, scale_ref, g_ref, e_ref, words_ref, e_new_ref):
+    gamma = gamma_ref[0]
+    scale = scale_ref[0]
+    p = gamma * g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    bits = (p >= 0).astype(jnp.uint32)  # (block_rows, LANE)
+    br = bits.shape[0]
+    b = bits.reshape(br, WORDS_PER_ROW, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words_ref[...] = jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+    delta = scale * (2.0 * bits.astype(jnp.float32) - 1.0)
+    e_new_ref[...] = p - delta
+
+
+def ef_sign_compress(
+    g, e, gamma, scale, *, block_rows: int = BLOCK_ROWS, interpret: bool = False
+):
+    """(rows,1024) γg+e → ((rows,32) uint32 packed signs, (rows,1024) residual)."""
+    rows = g.shape[0]
+    block_rows = min(block_rows, rows)
+    grid = (_grid(rows, block_rows),)
+    return pl.pallas_call(
+        _ef_sign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, WORDS_PER_ROW), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, WORDS_PER_ROW), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gamma.reshape(1), scale.reshape(1), g, e)
+
+
+# ---------------------------------------------------------------------------
+# decompress-and-mean over W gathered payloads
+# ---------------------------------------------------------------------------
+
+
+def _decompress_mean_kernel(scales_ref, words_ref, out_ref, *, w: int):
+    # words block: (w, block_rows, WORDS_PER_ROW); scales: (w,)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for i in range(w):  # w is static (16/32); unrolled vector loop
+        wd = words_ref[i]  # (block_rows, WORDS_PER_ROW)
+        bits = (wd[..., None] >> shifts) & jnp.uint32(1)
+        signs = 2.0 * bits.reshape(out_ref.shape).astype(jnp.float32) - 1.0
+        acc = acc + scales_ref[i] * signs
+    out_ref[...] = acc / w
+
+
+def sign_decompress_mean(
+    words, scales, *, block_rows: int = BLOCK_ROWS, interpret: bool = False
+):
+    """(W,rows,32) uint32 + (W,) scales → (rows,1024) mean of ±scaleᵢ."""
+    w, rows, _ = words.shape
+    block_rows = min(block_rows, rows)
+    grid = (_grid(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_decompress_mean_kernel, w=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w,), lambda i: (0,)),
+            pl.BlockSpec((w, block_rows, WORDS_PER_ROW), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(scales, words)

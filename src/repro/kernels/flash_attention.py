@@ -1,0 +1,115 @@
+"""Pallas TPU flash-attention kernel (forward) — the serving-path hot spot.
+
+The XLA chunked attention (repro.models.layers.chunked_attention) is the
+framework's portable implementation; this kernel is the TPU-native version
+of the same online-softmax algorithm with explicit VMEM tiling:
+
+  grid = (batch·heads, Sq/BLOCK_Q)  — one core-resident q block per cell,
+  inner fori over KV blocks with (acc, m, l) in VREGs/VMEM.
+
+BlockSpecs stage q (BLOCK_Q, D), k/v (Sk, D) per (b,h); for long Sk the
+kv operand streams HBM→VMEM block-by-block via the explicit fori slicing
+(pl.dynamic_slice) so resident VMEM is O(BLOCK_Q·D + BLOCK_K·D).
+
+Causal + sliding-window masking matches ``ref_attention`` exactly; validated
+in interpret mode against the pure-jnp oracle over shape/window sweeps
+(tests/test_flash_kernel.py). Forward-only: the training path keeps the XLA
+implementation (jax.checkpoint recompute); serving (prefill) is where the
+fused kernel pays.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sk: int, scale: float,
+                  causal: bool, window: int, block_k: int):
+    # q_ref: (1, BLOCK_Q, D); k_ref/v_ref: (1, SK_PAD, D); o_ref like q_ref
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale
+    bq, d = q.shape
+    skp = k_ref.shape[1]
+    nk = skp // block_k
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def body(kidx, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(kidx * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kidx * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (BLOCK_Q, BLOCK_K) on the MXU
+        k_pos = kidx * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = k_pos < sk
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window:
+            mask = mask & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D) — kv already expanded to H query heads
+    k: jax.Array,  # (B, Sk, H, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    # layout: fold (B, H) into the grid's first axis; pad S to block multiples
+    nq = (sq + block_q - 1) // block_q
+    skp = ((sk + block_k - 1) // block_k) * block_k
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, nq * block_q - sq), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    qt = qt.reshape(b * h, nq * block_q, d)
+    kt = kt.reshape(b * h, skp, d)
+    vt = vt.reshape(b * h, skp, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, sk=sk, scale=scale, causal=causal, window=window,
+            block_k=block_k,
+        ),
+        grid=(b * h, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, skp, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, skp, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq * block_q, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    out = out.reshape(b, h, nq * block_q, d)[:, :, :sq]
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,98 @@
+"""Pallas TPU decode-attention kernel: one query token vs a deep KV cache.
+
+The decode shapes (decode_32k: B=128 × T=32k cache; long_500k: B=1 × 500k)
+are pure HBM-bandwidth workloads — every step streams the whole cache once.
+The XLA path materializes the (B,H,T) logits row and several softmax
+intermediates; this kernel streams KV blocks through VMEM with an online
+softmax so HBM traffic is exactly one cache read + one O(B·H·D) write.
+
+grid = (B·H,); inner fori over T/BLOCK_T cache blocks. Supports the ring-
+buffer validity mask (slot ≤ pos, or all-valid once wrapped) used by the
+sliding-window caches.
+
+Validated interpret=True against repro.models.layers.decode_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BLOCK_T = 512
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, *, t_valid_mode: str,
+                   pos: int | None, block_t: int, scale: float, t_cache: int):
+    # q_ref: (1, D); k_ref/v_ref: (1, T_PAD, D); o_ref: (1, D)
+    q = q_ref[0].astype(jnp.float32) * scale  # (D,)
+    d = q.shape[0]
+    tp = k_ref.shape[1]
+    nt = tp // block_t
+
+    def body(ti, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(ti * block_t, block_t), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ti * block_t, block_t), :].astype(jnp.float32)
+        s = k @ q  # (BLOCK_T,)
+        slots = ti * block_t + jax.lax.iota(jnp.int32, block_t)
+        mask = slots < t_cache
+        if t_valid_mode == "prefix":
+            mask = mask & (slots <= pos)
+        # 'all': ring buffer past wrap-around — every real slot valid
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p)
+        acc = corr * acc + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((d,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nt, body, (acc0, NEG_INF, 0.0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,  # (B, 1, H, D) — kv heads already expanded to H
+    k_cache: jax.Array,  # (B, T, H, D)
+    v_cache: jax.Array,
+    pos: int,  # static position for masking (prefix mode)
+    *,
+    ring_full: bool = False,  # True → every slot valid (wrapped ring buffer)
+    block_t: int = BLOCK_T,
+    interpret: bool = False,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    tp = ((t + block_t - 1) // block_t) * block_t
+    scale = 1.0 / math.sqrt(d)
+
+    qt = q.reshape(b, h, d).reshape(b * h, d)
+    kt = jnp.pad(k_cache.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+    vt = jnp.pad(v_cache.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+    kt = kt.reshape(b * h, tp, d)
+    vt = vt.reshape(b * h, tp, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel,
+            t_valid_mode="all" if ring_full else "prefix",
+            pos=pos, block_t=block_t, scale=scale, t_cache=t,
+        ),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bh: (bh, 0)),
+            pl.BlockSpec((1, tp, d), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, tp, d), lambda bh: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bh: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    return out.reshape(b, 1, h, d)

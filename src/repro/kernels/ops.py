@@ -1,0 +1,89 @@
+"""Jit'd public wrappers around the EF-sign kernels.
+
+``ef_sign_step(g, e, gamma)`` runs the full fused pipeline on an arbitrary
+flat tensor:
+
+    scale  = ‖γg+e‖₁ / d        (pass 1: blocked partial-L1 + tiny host sum)
+    words  = bitpack(sign(γg+e))
+    e_new  = (γg+e) − scale·sign(γg+e)
+    Δ      = scale·sign(γg+e)   (reconstructable from words+scale — not returned)
+
+Implementation selection: the Pallas path runs on TPU (or anywhere with
+``interpret=True``); the jnp reference path is the default on CPU so that the
+512-device dry-run never traces a Pallas call. ``force`` overrides for tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ef_sign, ref
+
+LANE = ref.LANE
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _use_pallas(force: str | None) -> tuple[bool, bool]:
+    """→ (use_pallas, interpret)."""
+    if force == "pallas":
+        return True, _backend() != "tpu"
+    if force == "ref":
+        return False, False
+    return (_backend() == "tpu"), False
+
+
+def pad_to_rows(x: jax.Array) -> tuple[jax.Array, int]:
+    """Flatten and zero-pad to a (rows, LANE) view; returns (view, orig_n)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    rows = max(1, (n + LANE - 1) // LANE)
+    flat = jnp.pad(flat, (0, rows * LANE - n))
+    return flat.reshape(rows, LANE), n
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def ef_sign_step(g: jax.Array, e: jax.Array, gamma: jax.Array, *, force: str | None = None):
+    """Fused EF-SIGNSGD compression of one tensor.
+
+    Returns ``(words, scale, e_new)`` with shapes ``((rows,32) u32, () f32,
+    g.shape f32)``. Note the padded tail influences the L1 sum by 0 (zeros) —
+    the scale divides by the *true* n, matching Alg. 1 exactly.
+    """
+    use_pallas, interpret = _use_pallas(force)
+    gv, n = pad_to_rows(g)
+    ev, _ = pad_to_rows(e)
+    gamma = jnp.asarray(gamma, jnp.float32)
+
+    if use_pallas:
+        partial = ef_sign.l1_partial(gv, ev, gamma, interpret=interpret)
+    else:
+        partial = ref.l1_partial_ref(gv, ev, gamma)
+    scale = jnp.sum(partial) / float(n)
+
+    if use_pallas:
+        words, e_new = ef_sign.ef_sign_compress(gv, ev, gamma, scale, interpret=interpret)
+    else:
+        words, e_new = ref.ef_sign_compress_ref(gv, ev, gamma, scale)
+    e_new = e_new.reshape(-1)[:n].reshape(g.shape)
+    return words, scale, e_new
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def decompress_mean(words: jax.Array, scales: jax.Array, *, force: str | None = None):
+    """Mean of W sign payloads: (W,rows,32) u32 + (W,) f32 → (rows,LANE) f32."""
+    use_pallas, interpret = _use_pallas(force)
+    if use_pallas:
+        return ef_sign.sign_decompress_mean(words, scales, interpret=interpret)
+    return ref.sign_decompress_mean_ref(words, scales)
+
+
+def delta_from(words: jax.Array, scale: jax.Array, n: int, shape) -> jax.Array:
+    """Reconstruct Δ = scale·sign(p) from a payload (for single-worker EF)."""
+    out = ref.sign_decompress_ref(words, scale)
+    return out.reshape(-1)[:n].reshape(shape)

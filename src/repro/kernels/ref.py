@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the EF-sign kernels.
+
+These define the exact semantics the Pallas kernels must match (tests sweep
+shapes/dtypes and assert_allclose against these). Data layout: the flat
+gradient is viewed as (rows, LANE) with LANE=1024 (ops.py pads); each row
+packs into LANE/32 = 32 uint32 words.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 1024
+WORDS_PER_ROW = LANE // 32
+
+
+def l1_partial_ref(g: jax.Array, e: jax.Array, gamma: jax.Array) -> jax.Array:
+    """Per-row L1 of the corrected step p = γ·g + e.  (rows, LANE) → (rows,)."""
+    p = gamma * g.astype(jnp.float32) + e.astype(jnp.float32)
+    return jnp.sum(jnp.abs(p), axis=-1)
+
+
+def ef_sign_compress_ref(
+    g: jax.Array, e: jax.Array, gamma: jax.Array, scale: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused EF sign compression (the paper's Alg. 1 lines 4-7 minus the norm).
+
+    p      = γ·g + e
+    words  = bitpack(p ≥ 0)                      (rows, 32) uint32
+    e_new  = p − scale·sign(p)                   (rows, LANE) f32
+
+    ``scale`` is the tensor-global ‖p‖₁/d computed from :func:`l1_partial_ref`.
+    """
+    p = gamma * g.astype(jnp.float32) + e.astype(jnp.float32)
+    bits = (p >= 0).astype(jnp.uint32)  # (rows, LANE)
+    rows = p.shape[0]
+    b = bits.reshape(rows, WORDS_PER_ROW, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words = jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+    delta = scale * (2.0 * bits.astype(jnp.float32) - 1.0)
+    e_new = p - delta
+    return words, e_new
+
+
+def sign_decompress_ref(words: jax.Array, scale: jax.Array) -> jax.Array:
+    """Unpack one payload: (rows, 32) uint32 → (rows, LANE) f32 of ±scale."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)  # (rows, 32, 32)
+    rows = words.shape[0]
+    signs = 2.0 * bits.reshape(rows, LANE).astype(jnp.float32) - 1.0
+    return scale * signs
+
+
+def sign_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array:
+    """Decompress-and-average W payloads (the all-gather hot loop).
+
+    words: (W, rows, 32) uint32;  scales: (W,) f32  →  (rows, LANE) f32.
+    """
+    outs = jax.vmap(sign_decompress_ref)(words, scales)
+    return jnp.mean(outs, axis=0)

@@ -1,0 +1,265 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on the
+production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the dry-run needs 512 placeholder CPU devices to build the
+2×16×16 production mesh. (Smoke tests / benches import other entrypoints and
+see the single real device.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 × both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import optim
+from repro.core.compressors import ScaledSignCompressor
+from repro.launch import specs as SP
+from repro.launch.mesh import ef_axis_names, make_production_mesh
+from repro.models.config import INPUT_SHAPES
+from repro.sharding.rules import ShardingRules, default_policy
+from repro.train import steps as steps_lib
+from repro.train.state import abstract_train_state
+from repro.utils import hlo as hlo_util
+
+# TPU v5e constants (per chip / per link) — see EXPERIMENTS.md §Roofline.
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
+
+
+def _mem_dict(mem) -> dict:
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if callable(v):
+            v = v()
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def lower_combo(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    strategy: str = "auto",
+    policy: str | None = None,
+    keep_hlo: bool = False,
+    attn_chunk: int | None = None,
+    remat: bool | None = None,
+):
+    """Lower+compile one (arch × shape × mesh); return the roofline record."""
+    import dataclasses
+
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    cfg = SP.long_context_variant(cfg, shape)
+    if attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    policy = policy or default_policy(cfg)
+    rules = ShardingRules(cfg, mesh, policy)
+
+    if strategy == "auto":
+        # paper-faithful default for training: EF-sign aggregation over the
+        # manual worker axes (data single-pod, pod multi-pod); fsdp policies
+        # on a single pod run single-worker Alg.2 via the dense path.
+        ef_axes = ef_axis_names(mesh, policy)
+        strategy = "ef_allgather" if ef_axes else "dense"
+    else:
+        ef_axes = ef_axis_names(mesh, policy) if strategy != "dense" else ()
+
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        # EF residuals in bf16 for bf16-param configs (DESIGN.md §8.3)
+        err_dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+        chain = (
+            optim.ef_sgd(1e-2, error_dtype=err_dt) if strategy == "dense" else optim.sgd(1e-2)
+        )
+        state_abs = abstract_train_state(
+            cfg, key, chain, strategy, mesh, ef_axes, error_dtype=err_dt
+        )
+        batch_abs = SP.train_batch_specs(cfg, shape)
+        bundle = steps_lib.make_train_step(
+            cfg, mesh, rules,
+            strategy=strategy, comp=ScaledSignCompressor(), local_chain=chain,
+            ef_axes=ef_axes, batch_example=batch_abs, state_example=state_abs,
+        )
+        args = (state_abs, batch_abs)
+    elif shape.kind == "prefill":
+        from repro.models import transformer
+
+        params_abs = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key)
+        batch_abs = SP.prefill_batch_specs(cfg, shape)
+        cache_abs = SP.cache_struct(cfg, shape)
+        bundle = steps_lib.make_prefill_step(
+            cfg, mesh, rules, batch_example=batch_abs, cache_example=cache_abs,
+            params_example=params_abs,
+        )
+        args = (params_abs, batch_abs, cache_abs)
+    else:  # decode
+        from repro.models import transformer
+
+        params_abs = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key)
+        cache_abs = SP.cache_struct(cfg, shape)
+        dec_in = SP.decode_inputs_specs(cfg, shape)
+        bundle = steps_lib.make_decode_step(
+            cfg, mesh, rules, cache_example=cache_abs, params_example=params_abs,
+        )
+        args = (params_abs, cache_abs, dec_in["tokens"], dec_in["pos"])
+
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            bundle.fn, in_shardings=bundle.in_shardings, out_shardings=bundle.out_shardings
+        )
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    lower_s = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_dict(compiled.memory_analysis())
+    hlo_text = compiled.as_text()
+    # trip-count-aware accounting: XLA cost_analysis counts while bodies once,
+    # underreporting scan-over-layers programs by the trip count (repro.utils.hlo)
+    parsed = hlo_util.analyze(hlo_text)
+    coll = parsed["collective_bytes"]
+
+    flops_dev = float(parsed["dot_flops"])
+    bytes_dev = float(parsed["hbm_bytes"])
+    coll_dev = float(coll["total_bytes"])
+    tokens = SP.tokens_in_step(cfg, shape)
+    model_flops = cfg.model_flops(tokens, forward_only=shape.kind != "train")
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "policy": policy,
+        "strategy": strategy,
+        "kind": shape.kind,
+        "lower_compile_s": round(lower_s, 1),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collectives": coll["by_kind_bytes"],
+            "collective_counts": coll["by_kind_count"],
+            # XLA's own (loop-bodies-once) numbers, for reference:
+            "xla_cost_flops": float(cost.get("flops", 0.0)),
+            "xla_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": mem,
+        "roofline": {
+            # per the brief: global HLO quantities over aggregate capacity ==
+            # per-device quantities over per-chip capacity (SPMD program)
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll_dev / ICI_BW,
+        },
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": model_flops / max(flops_dev * chips, 1.0),
+    }
+    dom = max(rec["roofline"], key=lambda k: rec["roofline"][k])
+    rec["roofline"]["dominant"] = dom
+    if keep_hlo:
+        rec["hlo_ops"] = hlo_util.op_histogram(hlo_text)
+        rec["_hlo_text"] = hlo_text
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="auto")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--dump-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                name = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+                if args.tag:
+                    name += f"__{args.tag}"
+                path = os.path.join(args.out, name + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {name}")
+                    continue
+                print(f"[lower] {name} ...", flush=True)
+                try:
+                    rec = lower_combo(
+                        arch, shape, multi_pod=multi_pod,
+                        strategy=args.strategy, policy=args.policy,
+                        keep_hlo=args.dump_hlo,
+                    )
+                    hlo_text = rec.pop("_hlo_text", None)
+                    if hlo_text is not None:
+                        with gzip.open(path[:-5] + ".hlo.gz", "wt") as f:
+                            f.write(hlo_text)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(
+                        f"  ok {rec['lower_compile_s']}s dominant={r['dominant']} "
+                        f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+                        f"collective={r['collective_s']:.3f}s "
+                        f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                        flush=True,
+                    )
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    err = {"arch": arch, "shape": shape, "mesh": multi_pod,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    with open(path + ".err", "w") as f:
+                        json.dump(err, f, indent=1)
+                    print(f"  FAIL {type(e).__name__}: {str(e)[:300]}", flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

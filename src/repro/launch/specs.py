@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) pair.
+
+No device allocation — these feed ``jax.jit(...).lower()`` for the multi-pod
+dry-run. Modality frontends are stubbed per the brief: VLM archs get
+precomputed patch embeddings, the audio arch gets precomputed encoder frame
+embeddings (the transformer backbone is what we build).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+S = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    toks = s
+    batch: dict = {}
+    if cfg.num_patch_tokens:
+        toks = s - cfg.num_patch_tokens
+        batch["patch_embeds"] = S((b, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder_layers:
+        batch["frames"] = S((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    batch["tokens"] = S((b, toks), jnp.int32)
+    batch["labels"] = S((b, toks), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels")
+    return batch
+
+
+def decode_inputs_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """One new token against a seq_len-deep cache."""
+    b = shape.global_batch
+    return {"tokens": S((b, 1), jnp.int32), "pos": S((), jnp.int32)}
+
+
+def cache_struct(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct tree matching transformer.init_cache (no allocation)."""
+    from repro.models import transformer
+
+    zeros = jax.eval_shape(
+        lambda: transformer.init_cache(
+            cfg, shape.global_batch, shape.seq_len, dtype, with_memory=bool(cfg.encoder_layers)
+        )
+    )
+    return zeros
+
+
+def long_context_variant(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k policy (DESIGN.md §4): SSM/hybrid run natively; attention
+    archs decode via the sliding-window ring cache (window 8192)."""
+    if shape.name != "long_500k":
+        return cfg
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return cfg
+    window = cfg.sliding_window or 8192
+    return dataclasses.replace(cfg, sliding_window=min(window, 8192))
+
+
+def tokens_in_step(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.kind == "decode":
+        return shape.global_batch  # one token per sequence
+    return shape.global_batch * shape.seq_len

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 200 --batch 8 --seq 128 --optimizer ef_signsgd \
+        --strategy dense --reduced
+
+On this CPU container use ``--reduced`` (the smoke variant); on a real
+cluster drop it and point ``--mesh-data/--mesh-model`` at the slice. The
+``--strategy`` flag selects the gradient exchange (dense | ef_allgather |
+ef_alltoall | majority_vote).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, reduced as make_reduced
+from repro.launch.mesh import make_host_mesh
+from repro.train.loop import TrainJob, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--optimizer", default="ef_signsgd")
+    ap.add_argument("--strategy", default="dense")
+    ap.add_argument("--compressor", default="scaled_sign")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
+    job = TrainJob(
+        cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
+        lr=args.lr, momentum=args.momentum, weight_decay=args.weight_decay,
+        optimizer=args.optimizer, strategy=args.strategy,
+        compressor=args.compressor, policy=args.policy, seed=args.seed,
+        microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    _, history = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))
+    print(f"final_loss={history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

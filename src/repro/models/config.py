@@ -1,0 +1,192 @@
+"""Unified model configuration covering all assigned architecture families.
+
+One dataclass drives dense / MoE / SSM / hybrid / enc-dec / VLM construction;
+``src/repro/configs/<arch>.py`` files instantiate it with the exact assigned
+hyper-parameters (and cite their source).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+ArchType = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+VOCAB_PAD = 256  # vocab padded up so embedding tables shard evenly on the mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: ArchType
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention (num_heads == 0 → attention-free, pure SSM)
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = full attention; >0 = windowed (ring cache)
+    attn_chunk: int = 512  # kv chunk for online-softmax attention
+    attn_window_slicing: bool = True  # §Perf win (exact): static windowed KV slicing
+    residual_seq_shard: bool = True  # §Perf: SP on the remat stream (DESIGN 5.1.3)
+    ssm_chunk_remat: bool = True  # §Perf win (−61% mem on 398B): remat mamba chunks
+    # mlp
+    d_ff: int = 0
+    gated_mlp: bool = True  # SwiGLU vs (whisper-style) GELU MLP
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # MoE replaces the MLP every k-th layer (jamba: 2)
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+    # SSM (mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0  # 0 → ceil(d_model/16)
+    # hybrid (jamba): repeating pattern of `hybrid_period` layers with one
+    # attention layer at `hybrid_attn_index`; others are mamba blocks.
+    hybrid_period: int = 0
+    hybrid_attn_index: int = 4
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # stubbed frontend emits this many frame embeddings
+    cross_attention: bool = False
+    learned_positions: bool = False  # whisper uses learned abs pos, no RoPE
+    # VLM (llava): stubbed vision frontend emits this many patch embeddings
+    num_patch_tokens: int = 0
+    # norms / dtypes
+    norm_type: Literal["rms", "layer"] = "rms"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # provenance
+    source: str = ""
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def padded_vocab(self) -> int:
+        return ((self.vocab_size + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def has_attention(self) -> bool:
+        return self.num_heads > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def layer_kind(self, idx: int) -> str:
+        """'attn' or 'mamba' for decoder layer ``idx``."""
+        if self.arch_type == "ssm":
+            return "mamba"
+        if self.arch_type == "hybrid":
+            return "attn" if idx % self.hybrid_period == self.hybrid_attn_index else "mamba"
+        return "attn"
+
+    def layer_has_moe(self, idx: int) -> bool:
+        return self.is_moe and (idx % self.moe_every == self.moe_every - 1 if self.moe_every > 1 else self.is_moe)
+
+    # ---------------------------------------------------------------- #
+    # parameter accounting (drives MODEL_FLOPS = 6·N·D in the roofline)
+    # ---------------------------------------------------------------- #
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        b = (self.num_heads + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        return q + kv + o + b
+
+    def _mlp_params(self) -> int:
+        mult = 3 if self.gated_mlp else 2
+        return mult * self.d_model * self.d_ff
+
+    def _moe_params(self) -> tuple[int, int]:
+        """(total, active) params of one MoE block."""
+        mult = 3 if self.gated_mlp else 2
+        per_expert = mult * self.d_model * self.d_ff
+        router = self.d_model * self.num_experts
+        total = self.num_experts * per_expert + router
+        active = self.experts_per_token * per_expert + router
+        return total, active
+
+    def _mamba_params(self) -> int:
+        d, di, st, dr = self.d_model, self.d_inner, self.ssm_state, self.dt_rank
+        return (
+            d * 2 * di  # in_proj
+            + di * self.ssm_conv  # depthwise conv
+            + di * (dr + 2 * st)  # x_proj
+            + dr * di + di  # dt_proj (+bias)
+            + di * st + di  # A_log, D
+            + di * d  # out_proj
+        )
+
+    def param_counts(self) -> tuple[int, int]:
+        """(total_params, active_params) of the decoder (+encoder) stack."""
+        total = active = 0
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                total += self._attn_params()
+                active += self._attn_params()
+            else:
+                total += self._mamba_params()
+                active += self._mamba_params()
+            if kind == "attn" or self.arch_type != "ssm":
+                if self.layer_has_moe(i):
+                    t, a = self._moe_params()
+                    total, active = total + t, active + a
+                elif self.d_ff:
+                    total += self._mlp_params()
+                    active += self._mlp_params()
+            total += 2 * self.d_model  # norms
+            active += 2 * self.d_model
+        if self.encoder_layers:
+            enc = self.encoder_layers * (self._attn_params() + self._mlp_params() + 2 * self.d_model)
+            if self.cross_attention:
+                total += self.num_layers * self._attn_params()  # decoder cross-attn
+                active += self.num_layers * self._attn_params()
+            total += enc
+            active += enc
+        emb = self.padded_vocab * self.d_model
+        total += emb if self.tie_embeddings else 2 * emb
+        active += emb if self.tie_embeddings else 2 * emb
+        return total, active
+
+    def model_flops(self, tokens: int, forward_only: bool = False) -> float:
+        """The roofline's MODEL_FLOPS: 6·N_active·D (training) or 2·N_active·D
+        (forward-only: prefill and decode)."""
+        _, active = self.param_counts()
+        return (2.0 if forward_only else 6.0) * active * tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,271 @@
+"""Shared neural building blocks (pure JAX — no flax offline).
+
+Parameters are plain nested dicts; init functions mirror apply functions.
+All matmuls run in ``compute_dtype`` with fp32 norms/softmax accumulation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.act_sharding import constrain
+
+Params = dict[str, Any]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, norm_type: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layer":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, norm_type: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rms":
+        y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (1.0 / math.sqrt(d_in))
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def apply_embedding(p: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, gated: bool, dtype, bias: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "in": init_linear(ks[0], d, d_ff, dtype, bias),
+        "out": init_linear(ks[1], d_ff, d, dtype, bias),
+    }
+    if gated:
+        p["gate"] = init_linear(ks[2], d, d_ff, dtype, bias)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, gated: bool) -> jax.Array:
+    h = apply_linear(p["in"], x)
+    if gated:
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return apply_linear(p["out"], h)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dtype = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, dtype, cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, kv * hd, dtype, cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, kv * hd, dtype, cfg.qkv_bias),
+        "wo": init_linear(ks[3], h * hd, d, dtype, False),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,
+    chunk: int = 512,
+    q_chunk: int = 1024,
+    window_slicing: bool = False,
+) -> jax.Array:
+    """Flash-style attention in XLA: double-chunked online softmax.
+
+    * GQA kv heads are expanded to query heads first (``repeat_kv``) so the
+      single head axis shards over ``model`` — without this the (Hkv, G)
+      factorization left scores unsharded on a 16-way axis (8.6 GiB score
+      blocks on the 398B config).
+    * outer ``lax.map`` over query chunks with ``jax.checkpoint`` — backward
+      recomputes scores per (q, kv) block instead of saving them (the flash
+      trick, expressed in XLA).
+    * inner ``lax.scan`` over KV chunks carries only (acc, m, l).
+
+    The causal mask is applied per block (full-FLOPs baseline — block-skip
+    is a §Perf item). ``window>0`` adds sliding-window masking.
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    out_dtype = q.dtype
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    k = constrain(k, "b.m.")
+    v = constrain(v, "b.m.")
+
+    nk = (sk + chunk - 1) // chunk
+    kpad = nk * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+
+    q_chunk = min(q_chunk, sq)
+    nq = (sq + q_chunk - 1) // q_chunk
+    qpad = nq * q_chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+
+    # §Perf: static windowed KV slicing. With a sliding window only the last
+    # (window + q_chunk) keys can be visible to a query chunk, so each q chunk
+    # scans a fixed-length slice instead of all of Sk — attention work drops
+    # from O(Sq·Sk) to O(Sq·window). (The masked-full path is the paper-
+    # faithful baseline; see EXPERIMENTS.md §Perf.)
+    slice_len = 0
+    if window and window_slicing and causal and q_offset == 0:
+        slice_len = min(((window + q_chunk + chunk - 1) // chunk) * chunk, nk * chunk)
+        if slice_len >= nk * chunk:
+            slice_len = 0  # window covers everything — no win
+
+    def q_body(qi):
+        qc = lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, axis=1)
+        qc = constrain(qc.astype(jnp.float32) * scale, "b.m.")
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        if slice_len:
+            start = jnp.clip((qi + 1) * q_chunk - slice_len, 0, nk * chunk - slice_len)
+            kps = lax.dynamic_slice_in_dim(kp, start, slice_len, axis=1)
+            vps = lax.dynamic_slice_in_dim(vp, start, slice_len, axis=1)
+            nk_local = slice_len // chunk
+        else:
+            start = 0
+            kps, vps, nk_local = kp, vp, nk
+
+        def kv_body(carry, kidx):
+            acc, m, l = carry
+            kc = lax.dynamic_slice_in_dim(kps, kidx * chunk, chunk, axis=1)
+            vc = lax.dynamic_slice_in_dim(vps, kidx * chunk, chunk, axis=1)
+            k_pos = start + kidx * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc.astype(jnp.float32))
+            mask = k_pos[None, :] < sk  # padding
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = constrain(jnp.where(mask[None, None], s, NEG_INF), "bm..")
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            acc = corr[..., None] * acc + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32)
+            )
+            return (acc, m_new, l_new), None
+
+        acc0 = constrain(jnp.zeros((b, hq, q_chunk, hd), jnp.float32), "bm..")
+        m0 = constrain(jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32), "bm.")
+        l0 = constrain(jnp.zeros((b, hq, q_chunk), jnp.float32), "bm.")
+        (acc, m, l), _ = lax.scan(kv_body, (acc0, m0, l0), jnp.arange(nk_local))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(out_dtype)  # (B, Cq, H, D)
+
+    if nq == 1:
+        out = q_body(jnp.int32(0))
+    else:
+        outs = lax.map(jax.checkpoint(q_body), jnp.arange(nq))  # (nq,B,Cq,H,D)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, hq, hd)
+    return out[:, :sq]
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hq, Dh)
+    k_cache: jax.Array,  # (B, T, Hkv, Dh)
+    v_cache: jax.Array,
+    valid_mask: jax.Array,  # (B, T) bool — which cache slots participate
+) -> jax.Array:
+    """Single-token attention over a (possibly ring-buffer) KV cache."""
+    b, _, hq, hd = q.shape
+    hkv = k_cache.shape[2]
+    group = hq // hkv
+    qh = q.reshape(b, hkv, group, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bhgd,bthd->bhgt", qh, k_cache.astype(jnp.float32))
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)

@@ -1,0 +1,192 @@
+"""Mamba-1 selective SSM block (Gu & Dao '23; falcon-mamba arXiv:2410.05355).
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel is replaced by a
+*chunked associative scan* — an outer ``lax.scan`` over time chunks carrying
+the (B, d_inner, state) boundary state, with a parallel
+``lax.associative_scan`` inside each chunk. This bounds the materialized
+(time × d_inner × state) tensor to one chunk (the full-sequence variant is
+~2 GB/example for falcon-mamba at 4k) while retaining within-chunk
+parallelism for the VPU — the same blocking idea as the original kernel,
+restructured for XLA/TPU instead of CUDA shared memory.
+
+Decode: O(1) recurrent update carrying (conv window, ssm state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.models.act_sharding import constrain
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, di, st, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_bias = jnp.log(jnp.exp(jnp.clip(
+        jnp.exp(jax.random.uniform(ks[0], (di,)) * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)),
+        1e-4, None)) - 1.0 + 1e-9)  # inverse-softplus of dt ~ LogUniform
+    return {
+        "in_proj": layers.init_linear(ks[1], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, di), jnp.float32) / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.init_linear(ks[3], di, dr + 2 * st, dtype),
+        "dt_proj": layers.init_linear(ks[4], dr, di, dtype, bias=True),
+        "dt_bias_init": dt_bias.astype(dtype),  # folded into dt_proj bias at init
+        "A_log": jnp.log(a_init).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": layers.init_linear(ks[5], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv1d. x: (B,S,di); w: (K,di). state: (B,K-1,di) or None."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return out + b.astype(x.dtype), new_state
+
+
+def _ssm_chunk_scan(a: jax.Array, bx: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + bx_t within one chunk via associative scan.
+
+    a, bx: (C, B, di, st); h0: (B, di, st) → (h_all (C,B,di,st), h_last).
+    """
+    bx = bx.at[0].add(a[0] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h_all = lax.associative_scan(combine, (a, bx), axis=0)
+    return h_all, h_all[-1]
+
+
+def ssm_scan(
+    dt: jax.Array,  # (B,S,di) — post-softplus
+    a: jax.Array,  # (di,st) — negative continuous-time A
+    b_t: jax.Array,  # (B,S,st)
+    c_t: jax.Array,  # (B,S,st)
+    x: jax.Array,  # (B,S,di)
+    h0: jax.Array,  # (B,di,st)
+    chunk: int = 128,
+    chunk_remat: bool = False,
+):
+    """Selective scan, chunked. Returns (y (B,S,di), h_last)."""
+    bsz, s, di = x.shape
+    st = a.shape[-1]
+    nchunks = max(1, (s + chunk - 1) // chunk)
+    pad = nchunks * chunk - s
+
+    def pad_t(z):
+        return jnp.pad(z, ((0, 0), (0, pad)) + ((0, 0),) * (z.ndim - 2))
+
+    dtp, btp, ctp, xp = pad_t(dt), pad_t(b_t), pad_t(c_t), pad_t(x)
+
+    # discretize: ā = exp(dt·A) (ZOH on A), b̄x = dt·B_t·x_t
+    def chunk_body(h, idx):
+        sl = lambda z: lax.dynamic_slice_in_dim(z, idx * chunk, chunk, axis=1)
+        dtc, btc, ctc, xc = sl(dtp), sl(btp), sl(ctp), sl(xp)  # (B,C,...)
+        a_bar = jnp.exp(
+            dtc.astype(jnp.float32)[..., None] * (-a.astype(jnp.float32))[None, None]
+        )  # (B,C,di,st)
+        bx = (
+            dtc.astype(jnp.float32)[..., None]
+            * btc.astype(jnp.float32)[:, :, None, :]
+            * xc.astype(jnp.float32)[..., None]
+        )  # (B,C,di,st)
+        # pin batch to data and d_inner to model — without this GSPMD
+        # replicates the scan tensors over 'data' under fsdp (34 GiB each
+        # on the 398B config)
+        a_bar = constrain(a_bar, "b.m.")
+        bx = constrain(bx, "b.m.")
+        h_all, h_last = _ssm_chunk_scan(
+            a_bar.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3), h
+        )
+        h_all = constrain(h_all, ".bm.")
+        y = jnp.einsum("cbds,bcs->bcd", h_all, ctc.astype(jnp.float32))
+        return constrain(h_last, "bm."), constrain(y, "b.m")
+
+    body = jax.checkpoint(chunk_body) if chunk_remat else chunk_body
+    h_last, ys = lax.scan(
+        body, constrain(h0.astype(jnp.float32), "bm."), jnp.arange(nchunks)
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, nchunks * chunk, di)[:, :s]
+    return y, h_last
+
+
+def apply_mamba(
+    p: Params,
+    x: jax.Array,  # (B,S,D)
+    cfg: ModelConfig,
+    state: dict | None = None,  # decode: {"conv": (B,K-1,di), "ssm": (B,di,st)}
+):
+    """Returns (out (B,S,D), new_state or None)."""
+    di, st, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    bsz, s, _ = x.shape
+    xz = layers.apply_linear(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B,S,di) each
+    xin, z = constrain(xin, "b.m"), constrain(z, "b.m")
+
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = layers.apply_linear(p["x_proj"], xc)  # (B,S,dr+2st)
+    dt_lowrank, b_t, c_t = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = layers.apply_linear(p["dt_proj"], dt_lowrank) + p["dt_bias_init"].astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)).astype(x.dtype)  # (B,S,di)
+
+    a = jnp.exp(p["A_log"].astype(jnp.float32))  # (di,st), positive → A = −a
+    h0 = (
+        state["ssm"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((bsz, di, st), jnp.float32)
+    )
+
+    if s == 1 and state is not None:
+        # O(1) decode step
+        a_bar = jnp.exp(dt.astype(jnp.float32)[..., 0, :, None] * (-a)[None])  # (B,di,st)
+        bx = (
+            dt.astype(jnp.float32)[:, 0, :, None]
+            * b_t.astype(jnp.float32)[:, 0, None, :]
+            * xc.astype(jnp.float32)[:, 0, :, None]
+        )
+        h = a_bar * h0 + bx
+        y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32)[:, 0])[:, None, :]
+        h_last = h
+    else:
+        y, h_last = ssm_scan(
+            dt, a, b_t, c_t, xc, h0, chunk_remat=cfg.ssm_chunk_remat
+        )
+
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = layers.apply_linear(p["out_proj"], y)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": h_last.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), dtype),
+    }

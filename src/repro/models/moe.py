@@ -1,0 +1,108 @@
+"""Mixture-of-experts block: top-k router + capacity-based dispatch/combine.
+
+The dispatch/combine are expressed as einsums against a one-hot dispatch
+tensor (the standard GSPMD-MoE formulation) so that sharding the expert axis
+over the ``model`` mesh axis turns the dispatch into an all-to-all — the
+communication pattern the roofline tracks for the MoE architectures.
+
+Aux losses: switch-style load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.act_sharding import constrain
+from repro.models.config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    p = {
+        "router": layers.init_linear(ks[0], d, e, dtype),
+        "w_in": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e, f, d), jnp.float32) * scale_out).astype(dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f), jnp.float32) * scale_in).astype(dtype)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    cap = int(cfg.capacity_factor * tokens * cfg.experts_per_token / cfg.num_experts)
+    return max(cap, cfg.experts_per_token)
+
+
+MOE_GROUP = 512  # dispatch group size: the (tokens × E × C) one-hot tensor
+# scales as 1.25·k·G per token, so grouping caps activation memory (standard
+# GSPMD-MoE practice) and sets the all-to-all granularity.
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) → (out, aux). Tokens are dispatched within groups of
+    MOE_GROUP to bound the one-hot dispatch tensor."""
+    b_orig, s_orig, d = x.shape
+    g = min(MOE_GROUP, s_orig)
+    if s_orig % g == 0 and s_orig > g:
+        x = x.reshape(b_orig * (s_orig // g), g, d)
+    out, aux = _apply_moe_grouped(p, x, cfg)
+    return out.reshape(b_orig, s_orig, d), aux
+
+
+def _apply_moe_grouped(p, x: jax.Array, cfg: ModelConfig):
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tokens = s  # capacity is per-group
+    cap = _capacity(cfg, tokens)
+
+    logits = layers.apply_linear(p["router"], x).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (B,S,k,E)
+    flat = onehot.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)
+    pos_in_expert = jnp.sum(pos_in_expert * onehot, axis=-1)  # (B,S,k)
+    keep = pos_in_expert < cap
+
+    cdtype = x.dtype
+    cap_onehot = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), cap, dtype=cdtype)
+    cap_onehot = cap_onehot * keep[..., None].astype(cdtype)
+    # dispatch: (B,S,E,C) — built in compute dtype to halve the big one-hots
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot.astype(cdtype), cap_onehot)
+    combine = jnp.einsum(
+        "bsk,bske,bskc->bsec", gate_vals.astype(cdtype), onehot.astype(cdtype), cap_onehot
+    )
+
+    expert_in = jnp.einsum("bsd,bsec->becd", x, dispatch.astype(cdtype))  # (B,E,C,D)
+    expert_in = constrain(expert_in, "bm..")
+    h = jnp.einsum("becd,edf->becf", expert_in, p["w_in"].astype(cdtype))
+    if cfg.gated_mlp:
+        g = jnp.einsum("becd,edf->becf", expert_in, p["w_gate"].astype(cdtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "bm..")
+    expert_out = constrain(
+        jnp.einsum("becf,efd->becd", h, p["w_out"].astype(cdtype)), "bm.."
+    )
+    out = jnp.einsum("becd,bsec->bsd", expert_out, combine.astype(cdtype))
+
+    # switch load-balance loss: E · Σ_e fraction_tokens_e · mean_prob_e
+    frac = jnp.mean(onehot[..., 0, :], axis=1) if k == 1 else jnp.mean(
+        jnp.sum(onehot, axis=2) / k, axis=1
+    )  # (B,E)
+    mean_prob = jnp.mean(probs, axis=1)  # (B,E)
+    aux = e * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, {"moe_aux_loss": aux, "moe_z_loss": zloss}

@@ -1,0 +1,454 @@
+"""Unified decoder stack covering all assigned architecture families.
+
+Layers are grouped into a repeating *pattern* of period
+``lcm(hybrid_period, moe_every)`` (1 for homogeneous archs, 8 for jamba); the
+stack is a ``lax.scan`` over pattern repeats with per-position parameter trees
+stacked on a leading ``repeats`` axis. This keeps HLO size and compile time
+O(period) instead of O(num_layers) — necessary for the 72-layer/398B config —
+and gives remat a natural per-repeat granularity.
+
+Caches follow the same layout: ``cache["blocks"][pos]`` holds stacked
+per-repeat state (KV tensors for attn positions — full or ring-buffer
+sliding-window — and (conv, ssm) state for mamba positions).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers, mamba, moe
+from repro.models.act_sharding import constrain
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# pattern
+# ---------------------------------------------------------------------------
+
+
+def pattern_period(cfg: ModelConfig) -> int:
+    hybrid = cfg.hybrid_period if cfg.arch_type == "hybrid" else 1
+    moe_p = cfg.moe_every if (cfg.is_moe and cfg.moe_every > 1) else 1
+    period = math.lcm(max(hybrid, 1), moe_p)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    return period
+
+
+def layer_spec(cfg: ModelConfig, pos: int) -> dict:
+    """Static description of pattern position ``pos``."""
+    kind = cfg.layer_kind(pos)
+    has_moe = cfg.layer_has_moe(pos)
+    has_mlp = cfg.d_ff > 0 and not has_moe
+    return {"kind": kind, "moe": has_moe, "mlp": has_mlp, "cross": cfg.cross_attention}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, spec: dict) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": layers.init_norm(cfg.d_model, cfg.norm_type, dtype)}
+    if spec["kind"] == "attn":
+        p["attn"] = layers.init_attention(ks[0], cfg)
+    else:
+        p["mamba"] = mamba.init_mamba(ks[0], cfg)
+    if spec["cross"]:
+        p["cross_norm"] = layers.init_norm(cfg.d_model, cfg.norm_type, dtype)
+        p["cross"] = layers.init_attention(ks[1], cfg)
+    if spec["moe"]:
+        p["norm2"] = layers.init_norm(cfg.d_model, cfg.norm_type, dtype)
+        p["moe"] = moe.init_moe(ks[2], cfg)
+    elif spec["mlp"]:
+        p["norm2"] = layers.init_norm(cfg.d_model, cfg.norm_type, dtype)
+        p["mlp"] = layers.init_mlp(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype, bias=cfg.norm_type == "layer"
+        )
+    return p
+
+
+def _init_stack(key, cfg: ModelConfig, num_layers: int, cross: bool) -> list[Params]:
+    """Per-position stacked block params: list[period] of (repeats, ...) trees."""
+    period = pattern_period(cfg) if not cross else 1
+    repeats = num_layers // period
+    blocks = []
+    for pos in range(period):
+        spec = layer_spec(cfg, pos)
+        if cross:  # encoder blocks: plain bidirectional attn + mlp
+            spec = {"kind": "attn", "moe": False, "mlp": True, "cross": False}
+        keys = jax.random.split(jax.random.fold_in(key, pos), repeats)
+        stacked = jax.vmap(lambda k: _init_block(k, cfg, spec))(keys)
+        blocks.append(stacked)
+    return blocks
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "embed": layers.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": layers.init_norm(cfg.d_model, cfg.norm_type, dtype),
+        "blocks": _init_stack(ks[1], cfg, cfg.num_layers, cross=False),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.init_linear(ks[2], cfg.d_model, cfg.padded_vocab, dtype)
+    if cfg.encoder_layers:
+        # whisper-style encoder over stubbed frame embeddings
+        enc_cfg = cfg
+        p["encoder"] = {
+            "blocks": _init_stack(ks[3], enc_cfg, cfg.encoder_layers, cross=True),
+            "final_norm": layers.init_norm(cfg.d_model, cfg.norm_type, dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_sublayer(
+    bp: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None,
+    pos_scalar,
+    memory: jax.Array | None,
+):
+    """Self-attention (train/prefill chunked, or decode over cache)."""
+    h = layers.apply_norm(bp["norm1"], x, cfg.norm_type)
+    a = bp["attn"]
+    hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = layers._split_heads(layers.apply_linear(a["wq"], h), hq, hd)
+    k = layers._split_heads(layers.apply_linear(a["wk"], h), hkv, hd)
+    v = layers._split_heads(layers.apply_linear(a["wv"], h), hkv, hd)
+    if cfg.rope_theta > 0:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and x.shape[1] == 1:
+        # decode: write this token's kv into the (possibly ring) cache
+        t_cache = cache["k"].shape[1]
+        slot = pos_scalar % t_cache
+        kc = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        slots = jnp.arange(t_cache)
+        if cfg.sliding_window and t_cache == cfg.sliding_window:
+            # ring buffer: all slots valid once it has wrapped
+            valid = (slots <= pos_scalar) | (pos_scalar >= t_cache)
+        else:
+            valid = slots <= pos_scalar
+        valid = jnp.broadcast_to(valid, (x.shape[0], t_cache))
+        out = layers.decode_attention(q, kc, vc, valid)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        window = cfg.sliding_window
+        out = layers.chunked_attention(
+            q, k, v, causal=True, window=window, chunk=cfg.attn_chunk,
+            window_slicing=cfg.attn_window_slicing,
+        )
+        if cache is not None:
+            # prefill: populate the cache with the (windowed) trailing kv
+            t_cache = cache["k"].shape[1]
+            s = k.shape[1]
+            if t_cache >= s:
+                kc = lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, axis=1
+                )
+                vc = lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, axis=1
+                )
+            else:
+                # ring buffer: keep last t_cache entries at slots (pos % t)
+                tail_k = k[:, s - t_cache :, :, :]
+                tail_v = v[:, s - t_cache :, :, :]
+                idx = (jnp.arange(s - t_cache, s)) % t_cache
+                kc = cache["k"].at[:, idx].set(tail_k.astype(cache["k"].dtype))
+                vc = cache["v"].at[:, idx].set(tail_v.astype(cache["v"].dtype))
+            new_cache = {"k": kc, "v": vc}
+    y = layers.apply_linear(a["wo"], out.reshape(*out.shape[:-2], hq * hd))
+    x = x + y
+
+    if memory is not None and "cross" in bp:
+        h = layers.apply_norm(bp["cross_norm"], x, cfg.norm_type)
+        c = bp["cross"]
+        qc = layers._split_heads(layers.apply_linear(c["wq"], h), hq, hd)
+        kc_ = layers._split_heads(layers.apply_linear(c["wk"], memory), hkv, hd)
+        vc_ = layers._split_heads(layers.apply_linear(c["wv"], memory), hkv, hd)
+        out = layers.chunked_attention(qc, kc_, vc_, causal=False, chunk=cfg.attn_chunk)
+        x = x + layers.apply_linear(c["wo"], out.reshape(*out.shape[:-2], hq * hd))
+    return x, new_cache
+
+
+def _apply_block(
+    bp: Params,
+    cfg: ModelConfig,
+    spec: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None,
+    pos_scalar,
+    memory: jax.Array | None,
+    causal: bool = True,
+):
+    """One pattern-position block. Returns (x, new_cache, aux)."""
+    aux = {}
+    if spec["kind"] == "attn":
+        if not causal:
+            # encoder block: bidirectional attention, no cache
+            h = layers.apply_norm(bp["norm1"], x, cfg.norm_type)
+            a = bp["attn"]
+            hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+            q = layers._split_heads(layers.apply_linear(a["wq"], h), hq, hd)
+            k = layers._split_heads(layers.apply_linear(a["wk"], h), hkv, hd)
+            v = layers._split_heads(layers.apply_linear(a["wv"], h), hkv, hd)
+            if cfg.rope_theta > 0:
+                q = layers.apply_rope(q, positions, cfg.rope_theta)
+                k = layers.apply_rope(k, positions, cfg.rope_theta)
+            out = layers.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+            x = x + layers.apply_linear(a["wo"], out.reshape(*out.shape[:-2], hq * hd))
+            new_cache = None
+        else:
+            x, new_cache = _apply_attn_sublayer(bp, cfg, x, positions, cache, pos_scalar, memory)
+    else:
+        h = layers.apply_norm(bp["norm1"], x, cfg.norm_type)
+        y, new_state = mamba.apply_mamba(bp["mamba"], h, cfg, state=cache)
+        x = x + y
+        new_cache = new_state
+
+    if spec["moe"]:
+        h = layers.apply_norm(bp["norm2"], x, cfg.norm_type)
+        y, aux = moe.apply_moe(bp["moe"], h, cfg)
+        x = x + y
+    elif spec["mlp"]:
+        h = layers.apply_norm(bp["norm2"], x, cfg.norm_type)
+        x = x + layers.apply_mlp(bp["mlp"], h, cfg.gated_mlp)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over repeats)
+# ---------------------------------------------------------------------------
+
+
+def _zero_aux():
+    return {"moe_aux_loss": jnp.float32(0.0), "moe_z_loss": jnp.float32(0.0)}
+
+
+def _run_stack(
+    blocks: list[Params],
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    caches: list | None,
+    pos_scalar,
+    memory: jax.Array | None,
+    causal: bool = True,
+    remat: bool = True,
+):
+    """scan over pattern repeats; returns (x, new_caches, aux_sum)."""
+    period = len(blocks)
+    specs = [
+        layer_spec(cfg, p) if causal else {"kind": "attn", "moe": False, "mlp": True, "cross": False}
+        for p in range(period)
+    ]
+
+    def repeat_body(carry, xs):
+        x, aux = carry
+        # sequence parallelism on the residual stream: remat saves one
+        # (B, S, D) checkpoint per repeat — sharding S over 'model' cuts the
+        # saved bytes 16× (Korthikanti-style SP; GSPMD re-gathers at matmuls)
+        x = constrain(x, "bm." if cfg.residual_seq_shard else "b..")
+        bps, cs = xs
+        new_cs = []
+        for pos in range(period):
+            cache_pos = cs[pos] if cs is not None else None
+            x, nc, a = _apply_block(
+                bps[pos], cfg, specs[pos], x, positions, cache_pos, pos_scalar, memory, causal
+            )
+            new_cs.append(nc if nc is not None else (cache_pos if cache_pos is not None else 0))
+            for k_ in aux:
+                aux[k_] = aux[k_] + a.get(k_, 0.0)
+        return (x, aux), tuple(new_cs) if cs is not None else 0
+
+    body = jax.checkpoint(repeat_body) if remat else repeat_body
+    if caches is None:
+
+        def body_nocache(carry, bps):
+            (x, aux), _ = body(carry, (bps, None))
+            return (x, aux), 0
+
+        (x, aux), _ = lax.scan(body_nocache, (x, _zero_aux()), tuple(blocks))
+        return x, None, aux
+
+    (x, aux), new_caches = lax.scan(body, (x, _zero_aux()), (tuple(blocks), tuple(caches)))
+    return x, list(new_caches), aux
+
+
+# ---------------------------------------------------------------------------
+# public model API
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Token (+ stub-modality) embedding. Returns (x (B,S,D), loss_mask (B,S))."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    tok = batch["tokens"]
+    x = layers.apply_embedding(params["embed"], tok, cdtype)
+    mask = jnp.ones(tok.shape, jnp.float32)
+    if cfg.num_patch_tokens and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cdtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        mask = jnp.concatenate([jnp.zeros(pe.shape[:2], jnp.float32), mask], axis=1)
+    return x, mask
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stubbed (B, encoder_seq, D) frame embeddings."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdtype)
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = _run_stack(
+        params["encoder"]["blocks"], cfg, x, positions, None, 0, None, causal=False
+    )
+    return layers.apply_norm(params["encoder"]["final_norm"], x, cfg.norm_type)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    cache: dict | None = None,
+    pos: jax.Array | int = 0,
+) -> tuple[jax.Array, dict | None, dict]:
+    """Full-sequence forward (train / prefill).
+
+    batch: tokens (B,S) [+ patch_embeds (B,P,D)] [+ frames (B,F,D)].
+    Returns (logits (B,S',Vpad), new_cache, aux).
+    """
+    x, _ = embed_inputs(params, cfg, batch)
+    positions = pos + jnp.arange(x.shape[1])
+    memory = None
+    if cfg.encoder_layers and "frames" in batch:
+        memory = encode(params, cfg, batch["frames"])
+    caches = cache["blocks"] if cache is not None else None
+    x, new_caches, aux = _run_stack(
+        params["blocks"], cfg, x, positions, caches, pos, memory
+    )
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = _lm_head(params, cfg, x)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["blocks"] = new_caches
+        if memory is not None:
+            new_cache["memory"] = memory.astype(cache.get("memory", memory).dtype)
+    return logits, new_cache, aux
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jax.Array,  # (B, 1)
+    pos: jax.Array,  # scalar int32 — current position
+) -> tuple[jax.Array, dict]:
+    """One-token decode against the cache. Returns (logits (B,1,V), cache)."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    x = layers.apply_embedding(params["embed"], tokens, cdtype)
+    positions = pos + jnp.arange(1)
+    memory = cache.get("memory")
+    if memory is not None:
+        memory = memory.astype(cdtype)
+    x, new_caches, _ = _run_stack(
+        params["blocks"], cfg, x, positions, cache["blocks"], pos, memory, remat=False
+    )
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = _lm_head(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_caches
+    return logits, new_cache
+
+
+def _lm_head(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].astype(x.dtype).T
+    return layers.apply_linear(params["head"], x)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    with_memory: bool = False,
+) -> dict:
+    """Stacked per-pattern-position cache. Attn positions get (R,B,T,Hkv,Dh)
+    KV buffers — T = sliding_window if configured and smaller, else max_len —
+    mamba positions get (R,B,·) recurrent state."""
+    period = pattern_period(cfg)
+    repeats = cfg.num_layers // period
+    blocks = []
+    for posn in range(period):
+        spec = layer_spec(cfg, posn)
+        if spec["kind"] == "attn":
+            t = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            c = {
+                "k": jnp.zeros((repeats, batch, t, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((repeats, batch, t, cfg.num_kv_heads, cfg.head_dim), dtype),
+            }
+        else:
+            c = {
+                "conv": jnp.zeros((repeats, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32),
+                "ssm": jnp.zeros((repeats, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+        blocks.append(c)
+    cache = {"blocks": blocks}
+    if with_memory and cfg.encoder_layers:
+        cache["memory"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict):
+    """Next-token cross entropy (fp32 logits) + MoE aux losses.
+
+    batch["labels"] aligns with batch["tokens"]; VLM patch positions are
+    excluded from the loss via the embed mask.
+    """
+    logits, _, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.num_patch_tokens and "patch_embeds" in batch:
+        logits = logits[:, cfg.num_patch_tokens :, :]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(nll))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss
+    if cfg.is_moe:
+        total = total + cfg.aux_loss_coef * aux["moe_aux_loss"] + cfg.router_z_coef * aux["moe_z_loss"]
+    metrics = {"loss": loss, **aux}
+    return total, metrics

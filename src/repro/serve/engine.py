@@ -1,0 +1,85 @@
+"""Batched decode engine: prefill a batch of prompts, then step the decoder.
+
+Greedy or temperature sampling; uniform-position batches (the dry-run's
+decode shapes are exactly one engine step against a deep cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.sharding.rules import ShardingRules
+from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0  # 0 → greedy
+    cache_dtype: Any = jnp.bfloat16
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, mesh, params, serve_cfg: ServeConfig | None = None, policy: str | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.serve_cfg = serve_cfg or ServeConfig()
+        self.rules = ShardingRules(cfg, mesh, policy)
+        self.params = jax.device_put(params, self.rules.named(self.rules.param_specs(params)))
+        self._decode = None
+        self._prefill = None
+
+    # -------------------------------------------------------------- #
+
+    def _build(self, batch_size: int, prompt: dict):
+        cache = transformer.init_cache(
+            self.cfg, batch_size, self.serve_cfg.max_len, self.serve_cfg.cache_dtype,
+            with_memory=bool(self.cfg.encoder_layers),
+        )
+        pre = steps_lib.make_prefill_step(
+            self.cfg, self.mesh, self.rules,
+            batch_example=prompt, cache_example=cache, params_example=self.params,
+        )
+        dec = steps_lib.make_decode_step(
+            self.cfg, self.mesh, self.rules,
+            cache_example=cache, params_example=self.params,
+        )
+        self._prefill = pre.jit()
+        self._decode = dec.jit()
+        return cache
+
+    def _sample(self, logits, key):
+        logits = logits[:, -1, : self.cfg.vocab_size].astype(jnp.float32)
+        if self.serve_cfg.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.serve_cfg.temperature, axis=-1)
+
+    # -------------------------------------------------------------- #
+
+    def generate(self, prompt: dict, new_tokens: int, seed: int = 0):
+        """prompt: {tokens (B,S), [patch_embeds], [frames]} → (B, new_tokens)."""
+        tokens = prompt["tokens"]
+        b, s = tokens.shape
+        cache = self._build(b, prompt)
+        if self.cfg.encoder_layers and "frames" in prompt:
+            cache["memory"] = transformer.encode(self.params, self.cfg, prompt["frames"])
+        with jax.set_mesh(self.mesh):
+            logits, cache = self._prefill(self.params, prompt, cache)
+            key = jax.random.PRNGKey(seed)
+            pos = s + (self.cfg.num_patch_tokens if self.cfg.num_patch_tokens and "patch_embeds" in prompt else 0)
+            out = []
+            tok = self._sample(logits, key)
+            for i in range(new_tokens):
+                out.append(tok)
+                key, sub = jax.random.split(key)
+                logits, cache = self._decode(
+                    self.params, cache, tok[:, None], jnp.int32(pos + i)
+                )
+                tok = self._sample(logits, sub)
+            return jnp.stack(out, axis=1)

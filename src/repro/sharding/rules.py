@@ -1,0 +1,210 @@
+"""Per-architecture parameter/activation sharding rules.
+
+Policies
+--------
+``dp``    — params replicated; batch over the data axes.
+``tp``    — Megatron-style tensor parallelism over ``model``: attention heads /
+            flattened head dims column-parallel, output projections row-
+            parallel, experts expert-parallel, vocab sharded.
+``fsdp``  — ``tp`` plus the complementary big dim sharded over ``data``
+            (ZeRO-3 / GSPMD fully-sharded; per-layer all-gathers inserted by
+            the compiler).
+
+Every rule checks divisibility against the mesh axis size and silently drops
+an axis that does not divide (e.g. qwen's 20 heads on a 16-way model axis fall
+back to feature-dim sharding — see DESIGN.md §5).
+
+Parameters are never sharded over the ``pod`` axis: pods are pure data
+parallel, and the inter-pod hop is exactly where the paper's compressed
+aggregation (``repro.core.aggregation``) is applied.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def default_policy(cfg: ModelConfig) -> str:
+    total, _ = cfg.param_counts()
+    return "fsdp" if total > 2e9 else "tp"
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _ok(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+class ShardingRules:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, policy: str | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = policy or default_policy(cfg)
+        self.model_size = _axis(mesh, "model")
+        self.data_size = _axis(mesh, "data")
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    # -------------------------------------------------------------- #
+    # leaf-level helpers
+    # -------------------------------------------------------------- #
+
+    def _m(self, dim: int):
+        return "model" if _ok(dim, self.model_size) else None
+
+    def _d(self, dim: int):
+        if self.policy != "fsdp":
+            return None
+        return "data" if _ok(dim, self.data_size) else None
+
+    def _matmul_spec(self, shape, col_parallel: bool, stacked: bool):
+        """(..., d_in, d_out) weight: column-parallel shards d_out over model,
+        row-parallel shards d_in over model; fsdp shards the other over data."""
+        lead = (None,) if stacked else ()
+        d_in, d_out = shape[-2], shape[-1]
+        if col_parallel:
+            return P(*lead, self._d(d_in), self._m(d_out))
+        return P(*lead, self._m(d_in), self._d(d_out))
+
+    # -------------------------------------------------------------- #
+    # parameter tree
+    # -------------------------------------------------------------- #
+
+    def param_specs(self, params) -> Any:
+        if self.policy == "dp":
+            return jax.tree.map(lambda _: P(), params)
+
+        def rule(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+            names = [n for n in names if isinstance(n, str)]
+            stacked = "blocks" in names  # leading repeats dim
+            shape = leaf.shape
+            lead = (None,) if stacked else ()
+            tail = names[-2:] if len(names) >= 2 else names
+
+            # embeddings / head. NOTE: the table feeds a gather — XLA's SPMD
+            # partitioner (0.8.x) hard-crashes partitioning a gather whose
+            # *feature* dim is sharded under a manual pod axis, so the table
+            # only ever shards dim 0 (vocab), over model (+data for fsdp).
+            if "embed" in names:
+                if self.policy == "fsdp" and _ok(shape[0], self.model_size * self.data_size):
+                    return P(("model", "data"), None)
+                return P(self._m(shape[0]), None)
+            if "head" in names:
+                if leaf.ndim == 1:
+                    return P(self._m(shape[0]))
+                return self._matmul_spec(shape, col_parallel=True, stacked=False)
+
+            # norms & small vectors
+            if leaf.ndim - len(lead) <= 1:
+                dim = shape[-1]
+                if any(n in names for n in ("conv_b", "dt_bias_init", "D")) or (
+                    tail and tail[-1] == "b"
+                    and any(x in names for x in ("wq", "wk", "wv", "in", "gate", "in_proj", "dt_proj"))
+                ):
+                    return P(*lead, self._m(dim))
+                return P(*lead) if lead else P()
+
+            # attention projections
+            if any(n in names for n in ("wq", "wk", "wv")):
+                return self._matmul_spec(shape, col_parallel=True, stacked=stacked)
+            if "wo" in names:
+                return self._matmul_spec(shape, col_parallel=False, stacked=stacked)
+
+            # MoE
+            if "router" in names:
+                return P(*lead, None, self._m(shape[-1]))
+            if "w_in" in names or "w_gate" in names:  # (R,E,D,F)
+                return P(*lead, self._m(shape[len(lead)]), self._d(shape[-2]), None)
+            if "w_out" in names:  # (R,E,F,D)
+                return P(*lead, self._m(shape[len(lead)]), self._d(shape[-2]), None)
+
+            # mamba
+            if "in_proj" in names:
+                return self._matmul_spec(shape, col_parallel=True, stacked=stacked)
+            if "out_proj" in names:
+                return self._matmul_spec(shape, col_parallel=False, stacked=stacked)
+            if "conv_w" in names:  # (R,K,di)
+                return P(*lead, None, self._m(shape[-1]))
+            if "x_proj" in names:  # (R,di,dr+2st)
+                return P(*lead, self._m(shape[-2]), None)
+            if "dt_proj" in names:  # (R,dr,di)
+                return P(*lead, None, self._m(shape[-1]))
+            if "A_log" in names:  # (R,di,st)
+                return P(*lead, self._m(shape[-2]), None)
+
+            # MLP
+            if "in" in names or "gate" in names:
+                return self._matmul_spec(shape, col_parallel=True, stacked=stacked)
+            if "out" in names:
+                return self._matmul_spec(shape, col_parallel=False, stacked=stacked)
+            return P(*lead) if lead else P()
+
+        return jax.tree_util.tree_map_with_path(rule, params)
+
+    # -------------------------------------------------------------- #
+    # batch / cache / activation specs
+    # -------------------------------------------------------------- #
+
+    def batch_specs(self, batch_example) -> Any:
+        """Shard the leading batch dim over all dp axes (when divisible)."""
+        dp = self.dp_axes
+        dp_size = 1
+        for a in dp:
+            dp_size *= _axis(self.mesh, a)
+
+        def rule(leaf):
+            b = leaf.shape[0]
+            if _ok(b, dp_size) or b == dp_size:
+                return P(dp, *([None] * (leaf.ndim - 1)))
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree.map(rule, batch_example)
+
+    def cache_specs(self, cache) -> Any:
+        """KV caches: batch over data if divisible, else cache-time over data;
+        kv-heads over model if divisible, else head_dim. Mamba state: d_inner
+        over model."""
+        data = "data" if self.data_size > 1 else None
+
+        def rule(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+            names = [n for n in names if isinstance(n, str)]
+            if "memory" in names:  # (B, F, D)
+                b = leaf.shape[0]
+                bspec = data if _ok(b, self.data_size) else None
+                return P(bspec, None, self._m(leaf.shape[-1]))
+            if "k" in names or "v" in names:  # (R,B,T,H,Dh)
+                _, b, t, h, dh = leaf.shape
+                if _ok(b, self.data_size):
+                    bspec, tspec = data, None
+                else:
+                    bspec, tspec = None, (data if _ok(t, self.data_size) else None)
+                hspec = self._m(h)
+                dspec = self._m(dh) if hspec is None else None
+                return P(None, bspec, tspec, hspec, dspec)
+            if "conv" in names:  # (R,B,K-1,di)
+                b = leaf.shape[1]
+                return P(None, data if _ok(b, self.data_size) else None, None, self._m(leaf.shape[-1]))
+            if "ssm" in names:  # (R,B,di,st)
+                b = leaf.shape[1]
+                return P(None, data if _ok(b, self.data_size) else None, self._m(leaf.shape[-2]), None)
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree_util.tree_map_with_path(rule, cache)
+
+    # -------------------------------------------------------------- #
+
+    def named(self, specs) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def opt_specs(self, params):
+        """Momentum/Adam state mirrors the param sharding."""
+        return self.param_specs(params)

@@ -1,0 +1,73 @@
+"""Checkpointing: pure-numpy npz + JSON manifest (orbax is not offline).
+
+State pytrees are flattened with '/'-joined key paths; restore rebuilds into
+the caller-provided abstract structure (so shardings/dtypes are re-applied by
+the caller via device_put).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, state: Any, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, x: flat.setdefault(_path_str(p), np.asarray(x)), state
+    )
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+    }
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    latest = os.path.join(directory, "LATEST")
+    with open(latest, "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def restore_checkpoint(directory: str, like: Any, step: int | None = None) -> Any:
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+
+    def fill(path, x):
+        arr = data[_path_str(path)]
+        assert tuple(arr.shape) == tuple(x.shape), (path, arr.shape, x.shape)
+        return jnp.asarray(arr, dtype=x.dtype)
+
+    return jax.tree_util.tree_map_with_path(fill, like)

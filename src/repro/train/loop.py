@@ -1,0 +1,109 @@
+"""Training loop: builds the step bundle, streams batches, logs, checkpoints."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optim
+from repro.core.compressors import get_compressor
+from repro.data import synthetic
+from repro.launch.mesh import dp_axis_names, ef_axis_names
+from repro.models.config import ModelConfig
+from repro.sharding.rules import ShardingRules, default_policy
+from repro.train import checkpoint as ckpt
+from repro.train import steps as steps_lib
+from repro.train.state import init_train_state
+
+
+@dataclasses.dataclass
+class TrainJob:
+    cfg: ModelConfig
+    mesh: Any
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    lr: float = 0.02
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    optimizer: str = "sgd"  # local per-worker chain: sgd | ef_sgd | adam | ...
+    strategy: str = "dense"  # dense | ef_allgather | ef_alltoall | majority_vote
+    compressor: str = "scaled_sign"
+    policy: str | None = None
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    lr_schedule: str = "step_decay"  # the paper's /10-decimation schedule
+    microbatches: int = 1  # gradient accumulation (M sequential passes)
+
+
+def _local_chain(job: TrainJob) -> optim.Transform:
+    sched = {
+        "constant": optim.constant_schedule(job.lr),
+        "step_decay": optim.step_decay_schedule(job.lr, job.steps),
+        "cosine": optim.cosine_schedule(job.lr, job.steps),
+    }[job.lr_schedule]
+    kw = dict(weight_decay=job.weight_decay)
+    if job.optimizer in ("sgd", "sgdm"):
+        return optim.sgd(sched, momentum=job.momentum or (0.9 if job.optimizer == "sgdm" else 0.0), **kw)
+    if job.optimizer in ("ef_sgd", "ef_signsgd"):
+        return optim.ef_sgd(sched, compressor=get_compressor(job.compressor), momentum=job.momentum, **kw)
+    if job.optimizer == "signsgd":
+        return optim.signsgd(sched, **kw)
+    if job.optimizer == "signum":
+        return optim.signum(sched, **kw)
+    if job.optimizer == "adam":
+        return optim.adam(sched, **kw)
+    raise ValueError(job.optimizer)
+
+
+def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: Callable | None = None):
+    cfg, mesh = job.cfg, job.mesh
+    policy = job.policy or default_policy(cfg)
+    rules = ShardingRules(cfg, mesh, policy)
+    ef_axes = ef_axis_names(mesh, policy) if job.strategy != "dense" else ()
+    chain = _local_chain(job)
+    comp = get_compressor(job.compressor)
+    key = jax.random.PRNGKey(job.seed)
+
+    if batches is None:
+        batches = synthetic.token_batches(job.seed, job.batch, job.seq, cfg.vocab_size)
+
+    with jax.set_mesh(mesh):
+        state = init_train_state(cfg, key, chain, job.strategy, mesh, ef_axes)
+        example = next(batches)
+        bundle = steps_lib.make_train_step(
+            cfg, mesh, rules,
+            strategy=job.strategy, comp=comp, local_chain=chain, ef_axes=ef_axes,
+            batch_example=example, state_example=state, microbatches=job.microbatches,
+        )
+        state = jax.device_put(state, bundle.in_shardings[0])
+        step_fn = bundle.jit()
+
+        history = []
+        t0 = time.time()
+        for i in range(job.steps):
+            batch = example if i == 0 else next(batches)
+            batch = jax.device_put(batch, bundle.in_shardings[1])
+            state, (loss, metrics) = step_fn(state, batch)
+            if i % job.log_every == 0 or i == job.steps - 1:
+                rec = {
+                    "step": i,
+                    "loss": float(loss),
+                    "wire_bytes": float(metrics["wire_bytes"]),
+                    "density": float(metrics["density"]),
+                    "wall_s": time.time() - t0,
+                }
+                history.append(rec)
+                if log_fn:
+                    log_fn(rec)
+            if job.ckpt_every and job.ckpt_dir and (i + 1) % job.ckpt_every == 0:
+                ckpt.save_checkpoint(job.ckpt_dir, jax.device_get(state), i + 1)
+        return state, history

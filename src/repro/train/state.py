@@ -1,0 +1,62 @@
+"""Training state pytree and constructors."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, optim
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any  # worker-local transform state (momentum etc.)
+    agg_state: aggregation.AggState
+    step: jax.Array
+
+
+def ef_world(mesh, ef_axes: tuple[str, ...]) -> int:
+    w = 1
+    for a in ef_axes:
+        w *= mesh.shape[a]
+    return w
+
+
+def _broadcast_worker_state(tree, w: int):
+    """Give per-worker state a leading EF-world axis (stacked across workers)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (w,) + x.shape), tree)
+
+
+def init_train_state(
+    cfg: ModelConfig,
+    key,
+    local_chain: optim.Transform,
+    strategy: str,
+    mesh=None,
+    ef_axes: tuple[str, ...] = (),
+    error_dtype=jnp.float32,
+) -> TrainState:
+    params = transformer.init_params(cfg, key)
+    opt_state = local_chain.init(params)
+    w = ef_world(mesh, ef_axes) if mesh is not None and ef_axes else 1
+    agg = aggregation.init_agg_state(strategy, params, world=w, error_dtype=error_dtype)
+    if ef_axes:
+        agg = agg._replace(
+            worker_error=_broadcast_worker_state(agg.worker_error, w),
+            server_error=_broadcast_worker_state(agg.server_error, w),
+        )
+        # momentum traces are also worker-local when EF axes are manual
+        opt_state = _broadcast_worker_state(opt_state, w)
+    return TrainState(params=params, opt_state=opt_state, agg_state=agg, step=jnp.int32(0))
+
+
+def abstract_train_state(cfg, key, local_chain, strategy, mesh, ef_axes, error_dtype=jnp.float32):
+    """eval_shape'd TrainState for dry-run lowering (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, k, local_chain, strategy, mesh, ef_axes, error_dtype),
+        key,
+    )

@@ -1,0 +1,335 @@
+"""Distributed train / prefill / decode step builders.
+
+Two gradient-exchange paths share the loss code (DESIGN.md §5):
+
+``dense``
+    one ``jax.jit``; GSPMD inserts the fp32 gradient all-reduce/reduce-scatter
+    — the SGD communication baseline. (An EF *optimizer* may still be used —
+    that is the paper's single-worker Algorithm 2 applied per param shard.)
+
+EF strategies (``ef_allgather`` / ``ef_alltoall`` / ``majority_vote``)
+    ``jax.shard_map`` manual over the EF worker axes (data axis single-pod,
+    pod axis multi-pod) with every other mesh axis left in GSPMD-auto mode,
+    so tensor/expert/fsdp parallelism keeps working *inside* each worker.
+    Per-worker grads → worker-local momentum → compressed exchange from
+    :mod:`repro.core.aggregation` → identical aggregated update everywhere.
+
+Worker-local state (EF residuals, momentum traces) is stacked on a leading
+EF-world axis and sharded over the EF axes; see ``state_specs``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import aggregation, optim
+from repro.core.compressors import Compressor
+from repro.models import transformer
+from repro.models.act_sharding import activation_sharding
+from repro.models.config import ModelConfig
+from repro.sharding.rules import ShardingRules
+from repro.train.state import TrainState
+
+
+def _prepend(spec: P, *axes) -> P:
+    return P(*axes, *tuple(spec))
+
+
+def _filter_manual_spec(spec: P, manual: frozenset) -> P:
+    """shard_map in/out_specs may only mention manual axes; auto-axis
+    shardings ride along implicitly. Drop non-manual names from the spec."""
+    out = []
+    for entry in tuple(spec):
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in manual)
+            out.append(kept if kept else None)
+        else:
+            out.append(entry if entry in manual else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _filter_manual(tree_specs, manual):
+    manual = frozenset(manual)
+    return jax.tree.map(
+        lambda s: _filter_manual_spec(s, manual), tree_specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _worker_state_specs(tree_specs, ef_axes):
+    """Worker-local pytrees get a leading EF-world dim sharded over ef_axes."""
+    ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
+    return jax.tree.map(lambda s: _prepend(s, ef), tree_specs)
+
+
+class StepBundle:
+    """A compiled-step description: fn + in/out shardings, ready to lower."""
+
+    def __init__(self, fn, in_shardings, out_shardings, donate_argnums=()):
+        self.fn = fn
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.donate_argnums = donate_argnums
+
+    def jit(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def _make_grad_fn(cfg: ModelConfig, microbatches: int, act_ctx):
+    """value_and_grad of the mean loss, optionally accumulated over
+    microbatches (batch dim split M-ways, lax.scan accumulation — constant
+    activation memory at the cost of M sequential passes)."""
+
+    def single(params, batch):
+        def lf(p):
+            with act_ctx():
+                return transformer.loss_fn(p, cfg, batch)
+
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    if microbatches <= 1:
+        return single
+
+    def accumulated(params, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mb_batch):
+            (loss, metrics), grads = single(params, mb_batch)
+            acc_g, acc_l, acc_m = carry
+            acc_g = jax.tree.map(jnp.add, acc_g, grads)
+            acc_m = {k: acc_m[k] + metrics[k] for k in acc_m}
+            return (acc_g, acc_l + loss, acc_m), None
+
+        zeros_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        # first microbatch runs unrolled to seed the metric structure
+        (l0, m0), g0 = single(params, jax.tree.map(lambda x: x[0], mb))
+        zero_m = {k: jnp.zeros_like(v) for k, v in m0.items()}
+        (grads, loss, metrics), _ = jax.lax.scan(
+            body, (zeros_g, jnp.float32(0.0), zero_m), jax.tree.map(lambda x: x[1:], mb)
+        )
+        grads = jax.tree.map(lambda a, g: (a + g.astype(jnp.float32)) / microbatches, grads, g0)
+        loss = (loss + l0) / microbatches
+        metrics = {k: (metrics[k] + m0[k]) / microbatches for k in metrics}
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        return (loss, metrics), grads
+
+    return accumulated
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh,
+    rules: ShardingRules,
+    *,
+    strategy: str = "dense",
+    comp: Compressor | None = None,
+    local_chain: optim.Transform,
+    ef_axes: tuple[str, ...] = (),
+    batch_example: Any,
+    state_example: TrainState,
+    microbatches: int = 1,
+) -> StepBundle:
+    param_specs = rules.param_specs(state_example.params)
+    opt_specs_base = jax.tree.map(
+        lambda _: P(), state_example.opt_state
+    ) if rules.policy == "dp" else _opt_specs(rules, state_example)
+    batch_specs = rules.batch_specs(batch_example)
+
+    if strategy == "dense":
+        assert not ef_axes
+
+        dp_axes = rules.dp_axes
+
+        grad_fn = _make_grad_fn(
+            cfg, microbatches, lambda: activation_sharding(dp_axes, "model")
+        )
+
+        def train_step(state: TrainState, batch):
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            updates, opt_state = local_chain.update(grads, state.opt_state, state.params)
+            params = optim.apply_updates(state.params, updates)
+            new_state = TrainState(params, opt_state, state.agg_state, state.step + 1)
+            d = sum(x.size for x in jax.tree.leaves(grads))
+            metrics = dict(metrics, wire_bytes=jnp.float32(8.0 * d), density=jnp.float32(1.0))
+            return new_state, (loss, metrics)
+
+        state_specs = TrainState(
+            params=param_specs,
+            opt_state=opt_specs_base,
+            agg_state=jax.tree.map(lambda _: P(), state_example.agg_state),
+            step=P(),
+        )
+        in_sh = (rules.named(state_specs), rules.named(batch_specs))
+        out_sh = (rules.named(state_specs), rules.named((P(), {
+            k: P() for k in ("loss", "moe_aux_loss", "moe_z_loss", "wire_bytes", "density")
+        })))
+        return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0,))
+
+    # ---------------- EF strategies: shard_map over the EF worker axes ----
+    assert ef_axes, "EF strategies need at least one manual worker axis"
+    auto = frozenset(mesh.axis_names) - set(ef_axes)
+    ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
+
+    has_worker_err = bool(jax.tree.leaves(state_example.agg_state.worker_error))
+    agg_specs = aggregation.AggState(
+        worker_error=_worker_state_specs(param_specs, ef_axes) if has_worker_err else (),
+        server_error=jax.tree.map(lambda _: P(ef), state_example.agg_state.server_error),
+        key=P(),
+        steps=P(),
+    )
+    opt_specs = _worker_state_specs(opt_specs_base, ef_axes)
+    state_specs = TrainState(params=param_specs, opt_state=opt_specs, agg_state=agg_specs, step=P())
+    metric_keys = ("loss", "moe_aux_loss", "moe_z_loss", "wire_bytes", "density")
+
+    def _strip(tree):  # drop the local leading EF-world dim (size 1)
+        return jax.tree.map(lambda x: x[0], tree)
+
+    def _lift(tree):
+        return jax.tree.map(lambda x: x[None], tree)
+
+    auto_dp = tuple(a for a in rules.dp_axes if a not in ef_axes)
+    grad_fn = _make_grad_fn(
+        cfg, microbatches, lambda: activation_sharding(auto_dp or None, "model")
+    )
+
+    def worker_body(params, batch, opt_state, agg_state):
+        (loss, metrics), grads = grad_fn(params, batch)
+        opt_local = _strip(opt_state)
+        agg_local = agg_state._replace(
+            worker_error=_strip(agg_state.worker_error),
+            server_error=_strip(agg_state.server_error),
+        )
+        updates, opt_local = local_chain.update(grads, opt_local, params)
+        updates, agg_local, info = aggregation.aggregate(
+            strategy, updates, agg_local, ef_axes, comp
+        )
+        loss = lax.pmean(loss, ef_axes)
+        metrics = {k: lax.pmean(v, ef_axes) for k, v in metrics.items()}
+        metrics["wire_bytes"] = info.wire_bytes_per_device
+        metrics["density"] = info.mean_density
+        new_agg = agg_state._replace(
+            worker_error=_lift(agg_local.worker_error),
+            server_error=_lift(agg_local.server_error),
+            key=agg_local.key,
+            steps=agg_local.steps,
+        )
+        return updates, _lift(opt_local), new_agg, loss, metrics
+
+    manual = frozenset(ef_axes)
+    sharded_body = jax.shard_map(
+        worker_body,
+        mesh=mesh,
+        in_specs=_filter_manual((param_specs, batch_specs, opt_specs, agg_specs), manual),
+        out_specs=_filter_manual(
+            (param_specs, opt_specs, agg_specs, P(), {k: P() for k in metric_keys}),
+            manual,
+        ),
+        check_vma=False,
+        axis_names=manual,
+    )
+
+    def train_step(state: TrainState, batch):
+        updates, opt_state, agg_state, loss, metrics = sharded_body(
+            state.params, batch, state.opt_state, state.agg_state
+        )
+        params = optim.apply_updates(state.params, updates)
+        new_state = TrainState(params, opt_state, agg_state, state.step + 1)
+        return new_state, (loss, metrics)
+
+    in_sh = (rules.named(state_specs), rules.named(batch_specs))
+    out_sh = (rules.named(state_specs), rules.named((P(), {k: P() for k in metric_keys})))
+    return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0,))
+
+
+def _opt_specs(rules: ShardingRules, state_example: TrainState):
+    """Momentum traces etc. mirror param sharding; scalar states replicated."""
+    param_specs = rules.param_specs(state_example.params)
+    leaves_by_shape = {}
+
+    def rule(path, leaf):
+        # TraceState/AdamState leaves mirror params by shape; counters scalar
+        if leaf.ndim == 0:
+            return P()
+        # find a param leaf with identical path suffix via shape match
+        return _match_param_spec(leaf, param_specs, state_example.params)
+
+    return jax.tree_util.tree_map_with_path(rule, state_example.opt_state)
+
+
+def _match_param_spec(leaf, param_specs, params):
+    specs = jax.tree.leaves(param_specs, is_leaf=lambda s: isinstance(s, P))
+    shapes = [p.shape for p in jax.tree.leaves(params)]
+    for sp, sh in zip(specs, shapes):
+        if sh == leaf.shape:
+            return sp
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, rules: ShardingRules, *, batch_example, cache_example, params_example) -> StepBundle:
+    param_specs = rules.param_specs(params_example)
+    batch_specs = rules.batch_specs(batch_example)
+    cache_specs = rules.cache_specs(cache_example)
+
+    def prefill(params, batch, cache):
+        with activation_sharding(rules.dp_axes, "model"):
+            logits, cache, _ = transformer.forward(params, cfg, batch, cache=cache, pos=0)
+        return logits[:, -1:, :], cache
+
+    logit_spec = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None)
+    in_sh = (rules.named(param_specs), rules.named(batch_specs), rules.named(cache_specs))
+    out_sh = (NamedSharding(mesh, logit_spec), rules.named(cache_specs))
+    return StepBundle(prefill, in_sh, out_sh, donate_argnums=(2,))
+
+
+def make_decode_step(cfg: ModelConfig, mesh, rules: ShardingRules, *, cache_example, params_example) -> StepBundle:
+    param_specs = rules.param_specs(params_example)
+    cache_specs = rules.cache_specs(cache_example)
+    b = jax.tree.leaves(cache_example)[0].shape[1]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = P(dp) if b % dp_size == 0 and dp_size > 1 else P()
+
+    def decode(params, cache, tokens, pos):
+        with activation_sharding(rules.dp_axes, "model"):
+            return transformer.decode_step(params, cfg, cache, tokens, pos)
+
+    in_sh = (
+        rules.named(param_specs),
+        rules.named(cache_specs),
+        NamedSharding(mesh, tok_spec),
+        NamedSharding(mesh, P()),
+    )
+    out_sh = (NamedSharding(mesh, tok_spec), rules.named(cache_specs))
+    return StepBundle(decode, in_sh, out_sh, donate_argnums=(1,))

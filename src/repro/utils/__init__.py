@@ -1,0 +1,21 @@
+from repro.utils.pytree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_cast,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_dot",
+    "tree_norm",
+    "tree_size",
+    "tree_cast",
+]

@@ -1,0 +1,254 @@
+"""HLO-text analysis: trip-count-aware FLOP / byte / collective accounting.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts a while-loop
+body ONCE, so a scan-over-layers program (ours: L-repeat stacks, chunked
+attention, chunked mamba) under-reports FLOPs and collective traffic by the
+trip count. This module parses the post-SPMD per-device HLO, reconstructs the
+computation call graph (while bodies/conditions, fusions, calls), extracts
+each while loop's trip count from its condition computation (jax scans lower
+to ``iv < constant``), and multiplies every op's cost by the product of trip
+counts on its call chain.
+
+Estimators (per device, per step):
+  * ``dot_flops``        — 2 · Πout · Πcontract per dot, × multiplier
+  * ``collective_bytes`` — result bytes of all-reduce/all-gather/
+                           reduce-scatter/all-to-all/collective-permute,
+                           × multiplier (async -start/-done counted once)
+  * ``hbm_bytes``        — Σ (operand + result bytes) over materializing ops
+                           (fusion/dot/copy/collectives/scatter/...),
+                           × multiplier — an "every top-level op round-trips
+                           HBM" model.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_CONST_RE = re.compile(r"^[su](?:8|16|32|64)\[\]\s*$")
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        total += _shape_elems(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+class _Comp:
+    __slots__ = ("name", "ops", "symbols", "whiles", "calls", "int_consts")
+
+    def __init__(self, name: str):
+        self.name = name
+        # ops: list of (opname, result_type, operands_rest, full_rest)
+        self.ops: list[tuple[str, str, str]] = []
+        self.symbols: dict[str, str] = {}  # %name -> result type str
+        self.whiles: list[tuple[str, str]] = []  # (body, cond)
+        self.calls: list[str] = []
+        self.int_consts: list[int] = []
+
+
+def _parse(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and "->" in line:
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr:
+                cur = _Comp(hdr.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            # parameters: `%x = TYPE parameter(0)` are covered by _OP_LINE;
+            # anything else (metadata continuation) is skipped
+            continue
+        name, rtype, opname, rest = m.groups()
+        cur.symbols[name] = rtype
+        cur.ops.append((opname, rtype, rest))
+        if opname == "constant" and _CONST_RE.match(rtype):
+            cm = re.match(r"(\d+)\)", rest)
+            if cm:
+                cur.int_consts.append(int(cm.group(1)))
+        if opname == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", rest)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", rest)
+            if bm and cm2:
+                cur.whiles.append((bm.group(1), cm2.group(1)))
+        for key in ("calls=", "to_apply="):
+            km = re.search(re.escape(key) + r"%?([\w.\-]+)", rest)
+            if km:
+                cur.calls.append(km.group(1))
+        bm2 = re.search(r"branch_computations=\{([^}]*)\}", rest)
+        if bm2:
+            for n in re.split(r",\s*", bm2.group(1)):
+                n = n.strip().lstrip("%")
+                if n:
+                    cur.calls.append(n)
+    return comps
+
+
+def _trip_count(cond: _Comp) -> int:
+    """jax loops: condition computes `iv < bound` with `bound` a scalar int
+    constant living in the condition computation (possibly passed into a
+    wrapped-compare fusion). Heuristic: the largest scalar int constant."""
+    if cond.int_consts:
+        return max(1, max(cond.int_consts))
+    return 1
+
+
+def _multipliers(comps: dict[str, _Comp]) -> dict[str, float]:
+    referenced: set[str] = set()
+    for c in comps.values():
+        for b, cn in c.whiles:
+            referenced.update((b, cn))
+        referenced.update(c.calls)
+    roots = [n for n in comps if n not in referenced]
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth: int):
+        if name not in comps or depth > 64:
+            return
+        if m <= mult[name]:
+            return
+        mult[name] = m
+        c = comps[name]
+        for body, cond in c.whiles:
+            t = _trip_count(comps[cond]) if cond in comps else 1
+            visit(body, m * t, depth + 1)
+            visit(cond, m * t, depth + 1)
+        for callee in c.calls:
+            visit(callee, m, depth + 1)
+
+    for r in roots:
+        visit(r, 1.0, 0)
+    return dict(mult)
+
+
+def _dot_flops(rtype: str, rest: str, symbols: dict[str, str]) -> float:
+    out_shapes = _SHAPE_RE.findall(rtype)
+    if not out_shapes:
+        return 0.0
+    out_elems = _shape_elems(out_shapes[0][1])
+    lhs_m = re.match(r"%?([\w.\-]+)", rest)
+    if not lhs_m:
+        return 0.0
+    lhs_type = symbols.get(lhs_m.group(1), "")
+    lhs_shape = _SHAPE_RE.search(lhs_type)
+    if not lhs_shape:
+        return 0.0
+    lhs_dims = [int(d) for d in lhs_shape.group(2).split(",")] if lhs_shape.group(2) else []
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+_HBM_OPS = frozenset(
+    (
+        "fusion", "dot", "copy", "scatter", "gather", "convolution",
+        "dynamic-slice", "dynamic-update-slice", "reduce", "transpose",
+        "convert", "broadcast", "pad", "concatenate", "slice",
+        "select-and-scatter", "reduce-window", "sort",
+    )
+    + COLLECTIVES
+    + tuple(c + "-start" for c in COLLECTIVES)
+)
+
+
+def _operand_bytes(rest: str, symbols: dict[str, str]) -> int:
+    total = 0
+    # operands are the %names before the closing paren of the op call
+    call = rest.split(")", 1)[0]
+    for nm in re.findall(r"%([\w.\-]+)", call):
+        total += shape_bytes(symbols.get(nm, ""))
+    return total
+
+
+def analyze(text: str) -> dict:
+    comps = _parse(text)
+    mult = _multipliers(comps)
+
+    flops = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, float] = defaultdict(float)
+    hbm = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 1.0)
+        is_fused = name.startswith(("fused_", "wrapped_")) or "fused_computation" in name
+        for opname, rtype, rest in comp.ops:
+            if opname == "dot":
+                flops += m * _dot_flops(rtype, rest, comp.symbols)
+            base = opname[:-6] if opname.endswith("-start") else opname
+            if base in COLLECTIVES and not opname.endswith("-done"):
+                coll_bytes[base] += m * shape_bytes(rtype)
+                coll_count[base] += m
+            if not is_fused and opname in _HBM_OPS:
+                hbm += m * (shape_bytes(rtype) + _operand_bytes(rest, comp.symbols))
+
+    return {
+        "dot_flops": flops,
+        "collective_bytes": {
+            "total_bytes": sum(coll_bytes.values()),
+            "by_kind_bytes": dict(coll_bytes),
+            "by_kind_count": dict(coll_count),
+        },
+        "hbm_bytes": hbm,
+    }
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware collective accounting (see :func:`analyze`)."""
+    return analyze(hlo_text)["collective_bytes"]
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "scatter", "gather", "custom-call")) -> dict:
+    hist = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+([a-z\-]+)", line)
+        if m and m.group(1) in ops:
+            hist[m.group(1)] += 1
+    return dict(hist)

@@ -1,0 +1,42 @@
+"""Small pytree arithmetic helpers (we do not ship optax/flax offline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return sum(leaves, start=jnp.float32(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar elements in the pytree (static)."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

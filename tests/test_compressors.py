@@ -1,0 +1,131 @@
+"""Compressor contracts (paper Assumption A) — hypothesis property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis.extra import numpy as hnp
+
+from repro.core import compressors as C
+
+VECTORS = hnp.arrays(
+    np.float32,
+    st.integers(min_value=1, max_value=400),
+    # no subnormals: XLA flushes denormals to zero (sign(−5e−42) → sign(0))
+    elements=st.floats(-1e3, 1e3, width=32, allow_nan=False, allow_subnormal=False),
+)
+
+
+def _norm_sq(x):
+    return float(jnp.sum(jnp.asarray(x, jnp.float32) ** 2))
+
+
+@hypothesis.given(VECTORS)
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_pack_unpack_roundtrip(x):
+    xj = jnp.asarray(x)
+    signs = C.unpack_signs(C.pack_signs(xj), x.shape[0])
+    np.testing.assert_array_equal(np.asarray(signs) > 0, x >= 0)
+
+
+@hypothesis.given(VECTORS)
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_scaled_sign_is_density_compressor(x):
+    """Lemma 8: ||C(v) − v||² ≤ (1 − φ(v))||v||² with φ = ||v||₁²/(d||v||₂²)."""
+    xj = jnp.asarray(x)
+    delta = C.ScaledSignCompressor().roundtrip(xj)
+    phi = float(C.density(xj))
+    assert 0.0 <= phi <= 1.0 + 1e-6
+    assert _norm_sq(delta - xj) <= (1 - phi) * _norm_sq(xj) + 1e-3 * max(_norm_sq(xj), 1)
+
+
+@hypothesis.given(VECTORS, st.integers(1, 64))
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_topk_is_k_over_d_compressor(x, k):
+    xj = jnp.asarray(x)
+    comp = C.TopKCompressor(k=k)
+    delta = comp.roundtrip(xj)
+    d = x.shape[0]
+    assert _norm_sq(delta - xj) <= (1 - comp.delta(d)) * _norm_sq(xj) + 1e-4 * max(_norm_sq(xj), 1)
+
+
+@hypothesis.given(VECTORS)
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_block_scaled_sign_contract(x):
+    xj = jnp.asarray(x)
+    comp = C.BlockScaledSignCompressor(block=64)
+    delta = comp.roundtrip(xj)
+    # per-block density δ ≥ global density, so at minimum the global holds
+    assert _norm_sq(delta - xj) <= _norm_sq(xj) + 1e-3 * max(_norm_sq(xj), 1)
+
+
+@hypothesis.given(VECTORS, st.integers(0, 2**31 - 1))
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_randomk_expectation_contract(x, seed):
+    hypothesis.assume(np.linalg.norm(x) > 1e-3)
+    xj = jnp.asarray(x)
+    comp = C.RandomKCompressor(k=8)
+    # E||C(x)−x||² = (1−k/d)||x||² — check the average over keys
+    errs = [
+        _norm_sq(comp.roundtrip(xj, key=jax.random.PRNGKey(seed + i)) - xj)
+        for i in range(20)
+    ]
+    bound = (1 - comp.delta(x.shape[0])) * _norm_sq(xj)
+    assert np.mean(errs) <= bound * 1.35 + 1e-3
+
+
+def test_qsgd_unbiased_and_ef_scaled_contract():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512,))
+    comp = C.QSGDCompressor(s=15, ef_scaled=False)
+    outs = jnp.stack(
+        [comp.roundtrip(x, key=jax.random.PRNGKey(i)) for i in range(300)]
+    )
+    # unbiasedness of the raw quantizer
+    np.testing.assert_allclose(np.asarray(jnp.mean(outs, 0)), np.asarray(x), atol=0.15)
+    # Remark 5: U/k is a (1/k)-approximate compressor in expectation
+    comp2 = C.QSGDCompressor(s=15, ef_scaled=True)
+    k = comp2._k_factor(512)
+    errs = [
+        _norm_sq(comp2.roundtrip(x, key=jax.random.PRNGKey(i)) - x) for i in range(100)
+    ]
+    assert np.mean(errs) <= (1 - 1 / k) * _norm_sq(x) * 1.1
+
+
+def test_low_rank_reconstructs_low_rank_matrices():
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, (32, 2))
+    v = jax.random.normal(jax.random.PRNGKey(1), (32, 2))
+    m = (u @ v.T).reshape(-1)
+    comp = C.LowRankCompressor(rank=2, iters=4)
+    delta = comp.roundtrip(m)
+    assert _norm_sq(delta - m) <= 1e-4 * _norm_sq(m)
+
+
+def test_wire_bits_accounting():
+    """The paper's Σ(dᵢ+32) bits for layer-wise scaled sign."""
+    tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((7, 9))}
+    comp = C.ScaledSignCompressor()
+    bits = C.tree_wire_bits(comp, tree)
+    # padded to 32-bit words: ceil(100/32)*32 + 32 + ceil(63/32)*32 + 32
+    assert bits == (4 * 32 + 32) + (2 * 32 + 32)
+    dense_bits = C.tree_wire_bits(C.IdentityCompressor(), tree)
+    assert dense_bits == 32 * 163
+    assert dense_bits / bits > 20  # ~32× for large tensors
+
+
+def test_identity_is_delta_one():
+    x = jnp.arange(37.0)
+    assert _norm_sq(C.IdentityCompressor().roundtrip(x) - x) == 0.0
+
+
+@pytest.mark.parametrize("name", ["scaled_sign", "sign", "top_k", "qsgd", "low_rank", "identity", "block_scaled_sign", "random_k"])
+def test_registry(name):
+    comp = C.get_compressor(name)
+    x = jnp.linspace(-1, 1, 128)
+    key = jax.random.PRNGKey(0) if not comp.deterministic else None
+    out = comp.roundtrip(x, key=key)
+    assert out.shape == x.shape
+    assert comp.wire_bits(128) > 0

@@ -1,0 +1,74 @@
+"""Flash-attention Pallas kernel vs the XLA chunked-attention oracle —
+interpret-mode shape/dtype/mask sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models import layers as L
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,d,causal,window",
+    [
+        (2, 128, 128, 4, 64, True, 0),
+        (1, 200, 200, 2, 64, True, 0),  # non-multiple lengths (padding path)
+        (2, 128, 128, 4, 64, True, 48),  # sliding window
+        (1, 100, 260, 2, 64, False, 0),  # cross-attention, Sq != Sk
+        (1, 64, 64, 1, 128, True, 0),  # head_dim 128
+    ],
+)
+def test_flash_matches_oracle(b, sq, sk, h, d, causal, window):
+    key = jax.random.PRNGKey(sq * 7 + sk)
+    q = jax.random.normal(key, (b, sq, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, sk, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, sk, h, d))
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=64, block_k=64, interpret=True
+    )
+    ref = L.chunked_attention(q, k, v, causal=causal, window=window, chunk=64, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16_io():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 128, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 2, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    ref = L.chunked_attention(q, k, v, causal=True, chunk=64, q_chunk=64)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+# --------------------------- decode kernel -------------------------------- #
+
+
+@pytest.mark.parametrize(
+    "b,t,h,d,pos,ring_full",
+    [
+        (2, 256, 4, 64, 100, False),  # prefix-valid cache
+        (1, 300, 2, 64, 299, False),  # non-multiple T (padding path)
+        (2, 128, 4, 64, 500, True),  # wrapped ring buffer — all slots valid
+        (1, 512, 8, 128, 0, False),  # single valid slot
+    ],
+)
+def test_flash_decode_matches_oracle(b, t, h, d, pos, ring_full):
+    from repro.kernels.flash_decode import flash_decode
+
+    key = jax.random.PRNGKey(t + pos)
+    q = jax.random.normal(key, (b, 1, h, d))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, t, h, d))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, t, h, d))
+    out = flash_decode(q, kc, vc, pos, ring_full=ring_full, block_t=64, interpret=True)
+
+    slots = jnp.arange(t)
+    valid = jnp.broadcast_to(
+        jnp.ones((t,), bool) if ring_full else slots <= pos, (b, t)
+    )
+    ref = L.decode_attention(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
