@@ -1,39 +1,14 @@
-"""Communication accounting (paper §6.1's Σ(dᵢ+32)-bit claim, ~32×).
-
-Per assigned architecture: exact wire bits per training step for dense fp32
-vs scaled-sign vs top-k vs qsgd (layer-wise compression over the real
-parameter tree of the reduced config, plus analytic numbers for the full
-config sizes)."""
+"""Communication accounting (paper §6.1's Σ(dᵢ+32)-bit claim, ~32×) — thin
+wrapper over ``repro.bench.suites.aggregation.wire_bits_accounting`` (run
+``python -m repro.bench run --suite aggregation`` for the JSON artifact)."""
 
 from __future__ import annotations
 
-import jax
-
-from repro.configs import ARCH_IDS, get_config, reduced
-from repro.core.compressors import get_compressor, tree_wire_bits
-from repro.models import transformer as T
+from repro.bench.artifact import legacy_rows
+from repro.bench.registry import BenchContext
+from repro.bench.suites.aggregation import wire_bits_accounting
 
 
 def run_rows():
-    rows = []
-    comps = {
-        "dense": get_compressor("identity"),
-        "sign": get_compressor("scaled_sign"),
-        "top_k": get_compressor("top_k", k=64),
-        "qsgd4bit": get_compressor("qsgd", s=7),
-    }
-    for arch in ARCH_IDS:
-        cfg = reduced(get_config(arch))
-        params = T.init_params(cfg, jax.random.PRNGKey(0))
-        bits = {name: tree_wire_bits(c, params) for name, c in comps.items()}
-        for name, b in bits.items():
-            rows.append((f"wire_{arch}_{name}_bits", 0.0, b))
-        rows.append(
-            (f"wire_{arch}_sign_reduction", 0.0, round(bits["dense"] / bits["sign"], 2))
-        )
-        # analytic full-size numbers: Σᵢ(dᵢ+32) with dᵢ the real leaf sizes
-        full = get_config(arch)
-        total, _ = full.param_counts()
-        rows.append((f"wire_{arch}_full_dense_GB", 0.0, round(total * 4 / 2**30, 2)))
-        rows.append((f"wire_{arch}_full_sign_GB", 0.0, round(total / 8 / 2**30, 3)))
-    return rows
+    ctx = BenchContext(suite="aggregation", fast=False)
+    return legacy_rows(wire_bits_accounting(ctx))

@@ -1,101 +1,12 @@
-"""Paper §3 counterexamples (Fig. 1 claims) as a benchmark table.
-
-CE1: linear f with bimodal noise — SIGNSGD ascends, SGD/EF descend.
-CE2: non-smooth convex — SIGNSGD trapped on x₁+x₂=2 for ANY step sequence.
-CE3: smooth least squares, batch-1 stochastic — SIGNSGD trapped a.s.
-"""
+"""Paper §3 counterexamples (Fig. 1 claims) — thin wrapper over the ported
+implementations in ``repro.bench.suites.convergence`` (run ``python -m
+repro.bench run --suite convergence`` for the gated JSON artifact)."""
 
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import ScaledSignCompressor, ef_step, init_ef_state
-
-
-def _sgn(x):
-    # the paper's sign operator: sign(0) = +1 (matches our compressors)
-    return jnp.where(x >= 0, 1.0, -1.0)
-
-
-def ce1(steps=4000, gamma=0.05, seed=0):
-    key = jax.random.PRNGKey(seed)
-    res = {}
-    for name in ("sgd", "signsgd", "ef_signsgd"):
-        k = key
-        x = jnp.float32(0.0)
-        state = init_ef_state({"x": jnp.zeros(())})
-        for _ in range(steps):
-            k, sub = jax.random.split(k)
-            g = jnp.where(jax.random.uniform(sub) < 0.25, 4.0, -1.0)
-            if name == "sgd":
-                x = x - gamma * g
-            elif name == "signsgd":
-                x = x - gamma * _sgn(g)
-            else:
-                out, state = ef_step(ScaledSignCompressor(), {"x": -gamma * g}, state)
-                x = x + out["x"]
-            x = jnp.clip(x, -1.0, 1.0)
-        res[name] = float(x) / 4  # f(x) = x/4, optimum −0.25
-    return res
-
-
-def _ce2_grad(x, eps=0.5):
-    # subgradient with the paper's sign(0)=+1 choice — at x₁=x₂ the
-    # adversarial subgradient keeps sign(g)=±(1,−1) (paper §3, CE2)
-    s1 = _sgn(x[0] + x[1])
-    s2 = _sgn(x[0] - x[1])
-    return s1 * eps * jnp.array([1.0, 1.0]) + s2 * jnp.array([1.0, -1.0])
-
-
-def ce2(steps=800, eps=0.5):
-    f = lambda x: eps * jnp.abs(x[0] + x[1]) + jnp.abs(x[0] - x[1])
-    res = {}
-    x = jnp.array([1.0, 1.0])
-    for t in range(steps):
-        x = x - 0.05 / np.sqrt(t + 1) * _sgn(_ce2_grad(x, eps))
-    res["signsgd_f"] = float(f(x))
-    res["signsgd_line"] = float(x[0] + x[1])  # stays 2.0 — trapped
-
-    x = jnp.array([1.0, 1.0])
-    state = init_ef_state({"x": x})
-    for t in range(steps):
-        out, state = ef_step(ScaledSignCompressor(), {"x": -0.05 * _ce2_grad(x, eps)}, state)
-        x = x + out["x"]
-    res["ef_signsgd_f"] = float(f(x))
-    return res
-
-
-def ce3(steps=1500, eps=0.5, seed=0):
-    a1 = jnp.array([1.0, -1.0]) + eps * jnp.array([1.0, 1.0])
-    a2 = -jnp.array([1.0, -1.0]) + eps * jnp.array([1.0, 1.0])
-    f = lambda x: jnp.dot(a1, x) ** 2 + jnp.dot(a2, x) ** 2
-
-    def g(x, key):
-        pick = jax.random.uniform(key) < 0.5
-        ai = jnp.where(pick, 1.0, 0.0) * a1 + jnp.where(pick, 0.0, 1.0) * a2
-        return 4 * jnp.dot(ai, x) * ai
-
-    res = {}
-    key = jax.random.PRNGKey(seed)
-    x = jnp.array([1.0, 1.0])
-    for t in range(steps):
-        key, sub = jax.random.split(key)
-        x = x - 0.02 / np.sqrt(t + 1) * _sgn(g(x, sub))
-    res["signsgd_f"] = float(f(x))
-
-    key = jax.random.PRNGKey(seed)
-    x = jnp.array([1.0, 1.0])
-    state = init_ef_state({"x": x})
-    for t in range(steps):
-        key, sub = jax.random.split(key)
-        out, state = ef_step(ScaledSignCompressor(), {"x": -0.02 * g(x, sub)}, state)
-        x = x + out["x"]
-    res["ef_signsgd_f"] = float(f(x))
-    return res
+from repro.bench.suites.convergence import ce1, ce2, ce3  # noqa: F401 (re-export)
 
 
 def run():

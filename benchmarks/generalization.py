@@ -1,68 +1,9 @@
-"""Paper §5.2 / Fig. 3: over-parameterized least squares, exact A.6 data gen.
-
-Four full-batch-gradient algorithms; we track train loss, test loss, and the
-distance of the iterate from the span of observed gradients
-‖x_t − Π_{G_t} x_t‖ (Theorem IV / Lemma 9: EF → min-norm/max-margin solution).
-"""
+"""Paper §5.2 / Fig. 3 (Wilson least squares) — thin wrapper over the ported
+implementation in ``repro.bench.suites.convergence.wilson_run``."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import ScaledSignCompressor, ef_step, init_ef_state
-from repro.data.synthetic import wilson_least_squares
-
-
-def run(steps: int = 4000, seed: int = 0):
-    data = wilson_least_squares(seed)
-    a = jnp.asarray(data.a_train, jnp.float32)
-    y = jnp.asarray(data.y_train, jnp.float32)
-    at = jnp.asarray(data.a_test, jnp.float32)
-    yt = jnp.asarray(data.y_test, jnp.float32)
-    n, d = a.shape
-
-    def train_loss(x):
-        return jnp.mean((a @ x - y) ** 2)
-
-    def test_loss(x):
-        return float(jnp.mean((at @ x - yt) ** 2))
-
-    grad = jax.jit(jax.grad(train_loss))
-
-    def span_distance(x, gmat):
-        # distance to span of gradients ≡ component outside row-space of A
-        coef, *_ = np.linalg.lstsq(gmat, np.asarray(x), rcond=None)
-        return float(np.linalg.norm(np.asarray(x) - gmat @ coef))
-
-    gmat = np.asarray(data.a_train).T  # gradients live in span(rows of A)
-
-    results = {}
-    lrs = {"sgd": 0.05, "signsgd": 0.002, "signum": 0.002, "ef_signsgd": 0.05}
-    for name in ("sgd", "signsgd", "signum", "ef_signsgd"):
-        lr = lrs[name]
-        x = jnp.zeros((d,))
-        m = jnp.zeros((d,))
-        state = init_ef_state({"x": x})
-        for t in range(steps):
-            g = grad(x)
-            if name == "sgd":
-                x = x - lr * g
-            elif name == "signsgd":
-                x = x - lr * jnp.sign(g)
-            elif name == "signum":
-                m = g + 0.9 * m
-                x = x - lr * jnp.sign(m)
-            else:
-                out, state = ef_step(ScaledSignCompressor(), {"x": -lr * g}, state)
-                x = x + out["x"]
-        results[name] = {
-            "train_loss": float(train_loss(x)),
-            "test_loss": test_loss(x),
-            "span_dist": span_distance(x, gmat),
-        }
-    return results
+from repro.bench.suites.convergence import wilson_run as run
 
 
 def run_rows():

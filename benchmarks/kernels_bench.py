@@ -1,56 +1,15 @@
-"""EF-sign kernel micro-bench: jnp reference path timing on CPU (wall-clock)
-plus the derived TPU-side HBM-traffic model for the fused Pallas kernel.
-
-On this CPU container the Pallas kernel runs in interpret mode (Python), so
-wall-clock compares the jit'd REFERENCE path against the unfused 4-pass jnp
-pipeline; the 'derived' column reports modeled HBM bytes per element
-(fused = 1×read g + 1×read e + 1×write e' + 1/32 write words ≈ 12.1 B/elem
-vs unfused ≈ 4 passes ≈ 40+ B/elem → the ~3.3× bound on the compression
-stage; see EXPERIMENTS.md §Perf)."""
+"""EF-sign kernel micro-bench — thin wrapper over the registered benches in
+``repro.bench.suites.kernels`` (run ``python -m repro.bench run --suite
+kernels`` for the JSON artifact; this module keeps the benchmarks.run CSV)."""
 
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.compressors import ScaledSignCompressor
-from repro.kernels import ops
-
-
-def _time(fn, *args, iters=20):
-    fn(*args)  # compile
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+from repro.bench.artifact import legacy_rows
+from repro.bench.registry import BenchContext
+from repro.bench.suites import kernels as K
 
 
 def run_rows():
-    rows = []
-    comp = ScaledSignCompressor()
-
-    @jax.jit
-    def unfused(g, e, gamma):
-        p = gamma * g + e
-        payload = comp.compress(p)
-        delta = comp.decompress(payload, g.shape[0])
-        return payload.words, payload.scale, p - delta
-
-    fused = lambda g, e, gamma: ops.ef_sign_step(g, e, gamma, force="ref")
-
-    for n in (1 << 16, 1 << 20, 1 << 23):
-        g = jax.random.normal(jax.random.PRNGKey(0), (n,))
-        e = jax.random.normal(jax.random.PRNGKey(1), (n,))
-        gamma = jnp.float32(0.01)
-        t_un = _time(unfused, g, e, gamma)
-        t_fu = _time(fused, g, e, gamma)
-        rows.append((f"ef_sign_unfused_n{n}", round(t_un, 1), 0))
-        rows.append((f"ef_sign_fusedref_n{n}", round(t_fu, 1), round(t_un / t_fu, 2)))
-    # modeled HBM bytes/element on TPU: fused pallas vs composed XLA
-    rows.append(("ef_sign_model_bytes_fused", 0.0, 12.1))
-    rows.append(("ef_sign_model_bytes_unfused", 0.0, 40.3))
-    return rows
+    ctx = BenchContext(suite="kernels", fast=False)
+    metrics = K.ef_sign_fused_vs_unfused(ctx) + K.ef_sign_hbm_model(ctx)
+    return legacy_rows(metrics)

@@ -67,8 +67,10 @@ def run(pair: str, variant: str, out_dir: str):
         dr.get_config = patched
 
     rec = lower_combo(arch, shape, multi_pod=False, **kw)
-    name = f"{arch}__{shape}__single__{pair}-{variant}"
-    path = os.path.join(out_dir, name + ".json")
+    # canonical record path shared with the repro.bench roofline suite reader
+    from repro.bench.suites.roofline import dryrun_record_path
+
+    path = dryrun_record_path(out_dir, arch, shape, "single", f"{pair}-{variant}")
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     r = rec["roofline"]

@@ -1,64 +1,26 @@
-"""§Roofline table generator: reads the dry-run JSON records and renders the
-three-term roofline per (arch × shape), flags the dominant term, computes
-MODEL_FLOPS/HLO_FLOPS, and emits the markdown for EXPERIMENTS.md."""
+"""§Roofline table generator — thin wrapper over
+``repro.bench.suites.roofline`` (run ``python -m repro.bench run --suite
+roofline`` for the gated JSON artifact; this module keeps the markdown table
+and the benchmarks.run CSV rows)."""
 
 from __future__ import annotations
 
-import glob
-import json
-import os
+from repro.bench.artifact import legacy_rows
+from repro.bench.registry import BenchContext, SkipBench
+from repro.bench.suites import roofline as R
 
-RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
-HBM_PER_CHIP = 16 * 2**30  # v5e
+RESULTS = R.RESULTS_DIR
+HBM_PER_CHIP = R.HBM_PER_CHIP
 
-
-def load(mesh: str = "single", tag: str | None = None):
-    recs = []
-    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}*.json"))):
-        stem = os.path.basename(path)[: -len(".json")]
-        parts = stem.split("__")
-        if tag is None and len(parts) > 3:
-            continue
-        if tag is not None and (len(parts) < 4 or parts[3] != tag):
-            continue
-        with open(path) as f:
-            recs.append(json.load(f))
-    return recs
-
-
-def table(mesh="single", tag=None) -> str:
-    recs = load(mesh, tag)
-    lines = [
-        "| arch | shape | policy/strategy | compute_s | memory_s | collective_s "
-        "| dominant | model/HLO flops | state+temp GiB/chip | fits? |",
-        "|---|---|---|---|---|---|---|---|---|---|"[:-4] or "",
-    ]
-    lines[1] = "|---|---|---|---|---|---|---|---|---|"
-    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
-        m = r["memory"]
-        state = m.get("argument_size_in_bytes", 0)
-        temp = m.get("temp_size_in_bytes", 0)
-        gib = (state + temp) / 2**30
-        rf = r["roofline"]
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['policy']}/{r['strategy']} "
-            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
-            f"| **{rf['dominant'].replace('_s','')}** "
-            f"| {r['useful_flops_ratio']:.3f} | {gib:.1f} "
-            f"| {'Y' if (state + temp) <= HBM_PER_CHIP else 'over'} |"
-        )
-    return "\n".join(lines)
+load = R.load_records
+table = R.markdown_table
 
 
 def run_rows():
-    rows = []
-    for r in load("single"):
-        name = f"roofline_{r['arch']}_{r['shape']}"
-        dom = r["roofline"]["dominant"]
-        rows.append((name + "_dominant_" + dom, 0.0,
-                     round(r["roofline"][dom], 4)))
-        rows.append((name + "_useful_flops", 0.0, round(r["useful_flops_ratio"], 3)))
-    return rows
+    try:
+        return legacy_rows(R.roofline_records(BenchContext(suite="roofline")))
+    except SkipBench:
+        return []
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Legacy benchmark harness — one module per paper table/figure.
+
+Prefer ``python -m repro.bench run --suite <name>`` (the registry-driven
+subsystem with JSON artifacts and baseline gating); this CSV harness remains
+for the paper-table modules not yet ported (nn_proxy, density_fig2) and for
+quick eyeballing.
 
 Prints ``name,us_per_call,derived`` CSV. Modules:
   counterexamples   — paper §3 / Fig. 1 (CE1–CE3)

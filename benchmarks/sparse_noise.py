@@ -1,46 +1,9 @@
-"""Paper Appendix A.1 / Fig. 5: the sparse-noise toy.
-
-f(x)=½‖x‖² in R¹⁰⁰ with N(0,100²) noise on coordinate 0 only. Claim: SIGNSGD
-and scaled-SIGNSGD are FAST here (sign caps the noisy coordinate) while SGD
-and EF-SIGNSGD converge at the same SLOWER rate — the result that contradicts
-the 'bad coordinate' explanation when compared with real-data behavior.
-Paper's tuned LRs: 1e-3 for SGD/EF, 1e-2 for the sign methods.
-"""
+"""Paper Appendix A.1 / Fig. 5 (sparse-noise toy) — thin wrapper over the
+ported implementation in ``repro.bench.suites.convergence.sparse_noise_run``."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import ScaledSignCompressor, ef_step, init_ef_state
-from repro.data.synthetic import sparse_noise_grad
-
-
-def run(steps: int = 400, reps: int = 20, seed: int = 0):
-    d = 100
-    lrs = {"sgd": 1e-3, "ef_signsgd": 1e-3, "signsgd": 1e-2, "scaled_signsgd": 1e-2}
-    finals: dict[str, list[float]] = {k: [] for k in lrs}
-    for rep in range(reps):
-        key = jax.random.PRNGKey(seed * 1000 + rep)
-        for name, lr in lrs.items():
-            k = key
-            x = jnp.ones((d,)) * 5.0
-            state = init_ef_state({"x": x})
-            for t in range(steps):
-                k, sub = jax.random.split(k)
-                g = sparse_noise_grad(sub, x)
-                if name == "sgd":
-                    x = x - lr * g
-                elif name == "signsgd":
-                    x = x - lr * jnp.sign(g)
-                elif name == "scaled_signsgd":
-                    x = x - lr * jnp.mean(jnp.abs(g)) * jnp.sign(g)
-                else:
-                    out, state = ef_step(ScaledSignCompressor(), {"x": -lr * g}, state)
-                    x = x + out["x"]
-            finals[name].append(float(0.5 * jnp.sum(x * x)))
-    return {k: (float(np.mean(v)), float(np.std(v))) for k, v in finals.items()}
+from repro.bench.suites.convergence import sparse_noise_run as run
 
 
 def run_rows():

@@ -1,0 +1,33 @@
+"""repro.bench — registry-driven benchmark & regression subsystem.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.bench run --suite smoke
+    PYTHONPATH=src python -m repro.bench run --suite kernels --baseline BENCH_kernels.json
+    PYTHONPATH=src python -m repro.bench list
+
+Each run writes ``BENCH_<suite>.json`` (schema: repro/bench/artifact.py);
+``--baseline`` gates the run against a previous artifact and exits nonzero on
+regression. CI runs the ``smoke`` suite on every PR.
+"""
+
+from repro.bench.artifact import (
+    Metric,
+    Regression,
+    compare,
+    format_report,
+    load_artifact,
+    validate_document,
+    write_artifact,
+)
+from repro.bench.measure import bytes_metric, time_fn, wall_metric
+from repro.bench.registry import (
+    Bench,
+    BenchContext,
+    KNOWN_SUITES,
+    SkipBench,
+    all_benches,
+    benches_for_suite,
+    get_bench,
+    register_bench,
+)

@@ -1,0 +1,212 @@
+"""BENCH_<suite>.json artifact schema, IO, and baseline comparison.
+
+Schema (``schema_version`` 1)::
+
+    {
+      "schema_version": 1,
+      "suite": "smoke",
+      "git_sha": "abc123…" | null,
+      "created_unix": 1700000000,
+      "backend": "cpu",
+      "metrics": [
+        {"name": "...", "metric": "wall_time", "unit": "us", "value": 12.3,
+         "config": {...}, "direction": "lower", "tolerance": 1.0}
+      ]
+    }
+
+``direction`` states what counts as a regression against a baseline:
+  * ``lower``  — bigger is worse (wall-clock, bytes moved)
+  * ``higher`` — smaller is worse (speedups, throughput, accuracy)
+  * ``match``  — any drift beyond tolerance is worse (deterministic values)
+  * ``info``   — recorded for the trajectory, never gates (derived/noisy)
+
+``tolerance`` is the per-metric relative slack and ``abs_tolerance`` (optional,
+default 0) an absolute one — slack = tolerance·|base| + abs_tolerance, so
+metrics with near-zero baselines can still be gated loosely. The *baseline's*
+recorded values are authoritative when comparing (the run that set the bar
+also set the slack).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import time
+from typing import Any
+
+SCHEMA_VERSION = 1
+
+DIRECTIONS = ("lower", "higher", "match", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    name: str
+    value: float
+    metric: str = "value"  # what was measured: wall_time / bytes / loss / ...
+    unit: str = ""  # us, bytes, ratio, nats, ...
+    config: dict = dataclasses.field(default_factory=dict)
+    direction: str = "match"
+    tolerance: float = 0.05  # relative slack in the bad direction
+    abs_tolerance: float = 0.0  # absolute slack, for near-zero baselines
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"metric {self.name!r}: direction must be one of {DIRECTIONS}")
+        if not (self.tolerance >= 0 and self.abs_tolerance >= 0):
+            raise ValueError(f"metric {self.name!r}: tolerances must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    name: str
+    reason: str
+    baseline: float | None
+    current: float | None
+
+
+def git_sha(cwd: str | None = None) -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=cwd,
+        )
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):  # includes TimeoutExpired
+        return None
+
+
+def to_document(suite: str, metrics: list[Metric], *, backend: str | None = None) -> dict:
+    if backend is None:
+        try:
+            import jax
+
+            backend = jax.default_backend()
+        except Exception:
+            backend = "unknown"
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "suite": suite,
+        "git_sha": git_sha(),
+        "created_unix": int(time.time()),
+        "backend": backend,
+        "metrics": [dataclasses.asdict(m) for m in metrics],
+    }
+
+
+def artifact_path(suite: str, out_dir: str = ".") -> str:
+    return os.path.join(out_dir, f"BENCH_{suite}.json")
+
+
+def write_artifact(suite: str, metrics: list[Metric], out_dir: str = ".") -> str:
+    path = artifact_path(suite, out_dir)
+    os.makedirs(out_dir or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(to_document(suite, metrics), f, indent=1, sort_keys=False)
+        f.write("\n")
+    return path
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    version = doc.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise ValueError(f"{path}: schema_version {version!r} != {SCHEMA_VERSION}")
+    if "metrics" not in doc or not isinstance(doc["metrics"], list):
+        raise ValueError(f"{path}: missing metrics list")
+    return doc
+
+
+def validate_document(doc: dict) -> list[str]:
+    """Structural check; returns a list of problems (empty == valid)."""
+    problems = []
+    for key in ("schema_version", "suite", "created_unix", "backend", "metrics"):
+        if key not in doc:
+            problems.append(f"missing top-level key {key!r}")
+    for i, m in enumerate(doc.get("metrics", [])):
+        for key in ("name", "metric", "unit", "value", "config", "direction", "tolerance"):
+            if key not in m:
+                problems.append(f"metric[{i}]: missing {key!r}")
+        if m.get("direction") not in DIRECTIONS:
+            problems.append(f"metric[{i}] {m.get('name')!r}: bad direction {m.get('direction')!r}")
+        if not isinstance(m.get("value"), (int, float)):
+            problems.append(f"metric[{i}] {m.get('name')!r}: non-numeric value")
+    return problems
+
+
+def legacy_rows(metrics: list[Metric]) -> list[tuple[str, float, float]]:
+    """``(name, us_per_call, derived)`` rows for the old benchmarks.run CSV —
+    wall-clock metrics land in the middle column, everything else in the last."""
+    rows = []
+    for m in metrics:
+        if m.metric == "wall_time" and m.unit == "us":
+            rows.append((m.name, m.value, 0.0))
+        else:
+            rows.append((m.name, 0.0, m.value))
+    return rows
+
+
+# wall-clock metrics get this much *absolute* slack on top of the relative
+# tolerance: timings up to tens of ms are dominated by dispatch/scheduler
+# noise (observed 16× swings under CPU contention), so they inform the
+# artifact but only seriously-macro regressions can trip the gate
+ABS_SLACK_US = 20000.0
+
+
+def _is_regression(current: float, base: float, direction: str, tol: float,
+                   abs_slack: float = 0.0) -> bool:
+    if direction == "info":
+        return False
+    # tiny absolute floor so float noise never trips an exact-match gate
+    slack = tol * abs(base) + 1e-9 + abs_slack
+    if direction == "lower":
+        return current > base + slack
+    if direction == "higher":
+        return current < base - slack
+    return abs(current - base) > slack
+
+
+def compare(current_doc: dict, baseline_doc: dict) -> list[Regression]:
+    """Gate ``current_doc`` against ``baseline_doc``.
+
+    A metric regresses when it moved beyond the baseline's recorded tolerance
+    in its bad direction, or when it disappeared from the current run
+    (coverage loss). Metrics new in the current run are fine.
+    """
+    current = {m["name"]: m for m in current_doc["metrics"]}
+    regressions: list[Regression] = []
+    for base in baseline_doc["metrics"]:
+        name = base["name"]
+        cur = current.get(name)
+        if cur is None:
+            regressions.append(
+                Regression(name, "metric missing from current run", base["value"], None)
+            )
+            continue
+        direction = base.get("direction", "match")
+        tol = float(base.get("tolerance", 0.05))
+        abs_slack = float(base.get("abs_tolerance", 0.0))
+        if base.get("unit") == "us":
+            abs_slack += ABS_SLACK_US
+        if _is_regression(float(cur["value"]), float(base["value"]), direction, tol, abs_slack):
+            regressions.append(
+                Regression(
+                    name,
+                    f"{direction} violated beyond tol={tol:g}",
+                    float(base["value"]),
+                    float(cur["value"]),
+                )
+            )
+    return regressions
+
+
+def format_report(regressions: list[Regression]) -> str:
+    if not regressions:
+        return "baseline comparison: OK (no regressions)"
+    lines = [f"baseline comparison: {len(regressions)} regression(s)"]
+    for r in regressions:
+        lines.append(f"  REGRESSION {r.name}: {r.reason} (baseline={r.baseline} current={r.current})")
+    return "\n".join(lines)

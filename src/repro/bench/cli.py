@@ -1,0 +1,105 @@
+"""``python -m repro.bench`` — run suites, emit BENCH_<suite>.json, gate on a
+baseline.
+
+    run --suite smoke [--baseline BENCH_smoke.json] [--out DIR] [--only NAME]
+    list
+
+Exit codes: 0 ok · 1 regression vs baseline · 2 bench error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.bench import artifact
+from repro.bench.registry import BenchContext, SkipBench, all_benches, benches_for_suite
+
+
+def run_suite(suite: str, *, only: str | None = None, seed: int = 0,
+              log=print) -> tuple[list[artifact.Metric], int]:
+    """Run every bench in ``suite``; returns (metrics, n_errors)."""
+    ctx = BenchContext(suite=suite, fast=(suite == "smoke"), seed=seed)
+    benches = benches_for_suite(suite)
+    if only is not None:
+        benches = [b for b in benches if b.name == only]
+        if not benches:
+            raise KeyError(f"bench {only!r} is not in suite {suite!r}")
+    metrics: list[artifact.Metric] = []
+    errors = 0
+    for bench in benches:
+        t0 = time.perf_counter()
+        try:
+            rows = bench.fn(ctx)
+        except SkipBench as e:
+            log(f"  SKIP {bench.name}: {e}")
+            continue
+        except Exception as e:  # one broken bench shouldn't hide the others
+            log(f"  ERROR {bench.name}: {type(e).__name__}: {e}")
+            errors += 1
+            continue
+        wall = time.perf_counter() - t0
+        seen = {m.name for m in metrics}
+        names = [m.name for m in rows]
+        dupes = sorted(
+            {n for n in names if n in seen} | {n for n in set(names) if names.count(n) > 1}
+        )
+        if dupes:
+            log(f"  ERROR {bench.name}: duplicate metric names {dupes}")
+            errors += 1
+            continue
+        metrics.extend(rows)
+        log(f"  {bench.name}: {len(rows)} metrics in {wall:.1f}s")
+    return metrics, errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.bench", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    runp = sub.add_parser("run", help="run a suite and write BENCH_<suite>.json")
+    runp.add_argument("--suite", required=True)
+    runp.add_argument("--baseline", default=None,
+                      help="gate against this artifact; exit 1 on regression")
+    runp.add_argument("--out", default=".", help="artifact output dir (default: cwd)")
+    runp.add_argument("--only", default=None, help="run a single bench from the suite")
+    runp.add_argument("--seed", type=int, default=0)
+
+    sub.add_parser("list", help="list registered benches and their suites")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "list":
+        for b in all_benches():
+            desc = b.description.splitlines()[0] if b.description else ""
+            print(f"{b.name:32s} [{', '.join(b.suites)}] {desc}")
+        return 0
+
+    # resolve usage errors (unknown suite/bench, unreadable baseline) before
+    # spending minutes running benches
+    baseline = None
+    try:
+        if args.baseline:
+            baseline = artifact.load_artifact(args.baseline)
+        print(f"suite {args.suite}:")
+        t0 = time.perf_counter()
+        metrics, errors = run_suite(args.suite, only=args.only, seed=args.seed)
+    except (KeyError, OSError, ValueError) as e:
+        msg = str(e) if isinstance(e, OSError) else (e.args[0] if e.args else e)
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+    path = artifact.write_artifact(args.suite, metrics, args.out)
+    print(f"wrote {path} ({len(metrics)} metrics, {time.perf_counter() - t0:.1f}s)")
+
+    rc = 2 if errors else 0
+    if baseline is not None:
+        regressions = artifact.compare(artifact.load_artifact(path), baseline)
+        print(artifact.format_report(regressions))
+        if regressions:
+            rc = max(rc, 1)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

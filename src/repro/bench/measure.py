@@ -1,0 +1,72 @@
+"""Shared measurement utilities: warmup + median-of-k wall-clock with
+``jax.block_until_ready`` fencing, and helpers for turning timings into
+artifact metrics.
+
+Wall-clock on shared CI machines is noisy; every timing metric defaults to a
+wide tolerance (TIME_TOL, gate at 4×) so the baseline gate catches
+order-of-magnitude slowdowns (a lost fusion, an accidental sync) without flaking on scheduler
+jitter. Derived/deterministic quantities (bytes, ratios, losses) should use
+``match``/tight tolerances instead — those are the precise part of the gate.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+
+from repro.bench.artifact import Metric
+
+# default relative slack for wall-clock metrics on shared runners: a 4x
+# slowdown gates, scheduler jitter and cross-runner CPU variance do not
+TIME_TOL = 3.0
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2) -> dict:
+    """Median-of-``iters`` wall-clock for ``fn(*args)`` in microseconds.
+
+    Runs ``warmup`` untimed calls first (JIT compile + cache warm), fencing
+    every timed call with ``jax.block_until_ready`` so async dispatch does not
+    hide device time. Returns ``{"median_us", "min_us", "mean_us", "iters"}``.
+    """
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return {
+        "median_us": statistics.median(samples),
+        "min_us": min(samples),
+        "mean_us": statistics.fmean(samples),
+        "iters": iters,
+    }
+
+
+def wall_metric(name: str, timing: dict, *, config: dict | None = None) -> Metric:
+    """A ``Metric`` for a :func:`time_fn` result (median, lower-is-better)."""
+    return Metric(
+        name=name,
+        value=round(timing["median_us"], 2),
+        metric="wall_time",
+        unit="us",
+        config=dict(config or {}, iters=timing["iters"]),
+        direction="lower",
+        tolerance=TIME_TOL,
+    )
+
+
+def bytes_metric(name: str, value: float, *, config: dict | None = None,
+                 direction: str = "match", tolerance: float = 0.0) -> Metric:
+    """A bytes-moved accounting metric — deterministic, gated tightly."""
+    return Metric(
+        name=name,
+        value=float(value),
+        metric="bytes",
+        unit="bytes",
+        config=config or {},
+        direction=direction,
+        tolerance=tolerance,
+    )

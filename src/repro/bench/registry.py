@@ -1,0 +1,90 @@
+"""Benchmark registry: ``@register_bench`` + suite lookup.
+
+A *bench* is a named callable ``fn(ctx) -> list[Metric]`` registered into one
+or more *suites* (``kernels``, ``aggregation``, ``convergence``, ``serve``,
+``roofline``, ``smoke``). The ``smoke`` suite is the fast CI subset: a bench
+registered in both its home suite and ``smoke`` receives ``ctx.fast=True``
+when run as part of smoke and should scale its work down accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+KNOWN_SUITES = ("kernels", "aggregation", "convergence", "serve", "roofline", "smoke")
+
+
+class SkipBench(Exception):
+    """Raised by a bench body to skip cleanly (e.g. needs TPU, missing data)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchContext:
+    """Runtime knobs passed to every bench body."""
+
+    suite: str
+    fast: bool = False
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Bench:
+    name: str
+    fn: Callable
+    suites: tuple[str, ...]
+    description: str = ""
+
+
+_REGISTRY: dict[str, Bench] = {}
+
+
+def register_bench(name: str, *, suites: tuple[str, ...] | list[str]):
+    """Decorator: register ``fn(ctx) -> list[Metric]`` under ``name``."""
+    suites = tuple(suites)
+    if not suites:
+        raise ValueError(f"bench {name!r} must belong to at least one suite")
+    for s in suites:
+        if s not in KNOWN_SUITES:
+            raise ValueError(f"bench {name!r}: unknown suite {s!r} (known: {KNOWN_SUITES})")
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"bench {name!r} registered twice")
+        _REGISTRY[name] = Bench(
+            name=name, fn=fn, suites=suites, description=(fn.__doc__ or "").strip()
+        )
+        return fn
+
+    return deco
+
+
+def get_bench(name: str) -> Bench:
+    _load_builtin_suites()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown bench {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def benches_for_suite(suite: str) -> list[Bench]:
+    _load_builtin_suites()
+    if suite not in KNOWN_SUITES:
+        raise KeyError(f"unknown suite {suite!r} (known: {KNOWN_SUITES})")
+    return sorted((b for b in _REGISTRY.values() if suite in b.suites), key=lambda b: b.name)
+
+
+def all_benches() -> list[Bench]:
+    _load_builtin_suites()
+    return sorted(_REGISTRY.values(), key=lambda b: b.name)
+
+
+_loaded = False
+
+
+def _load_builtin_suites() -> None:
+    """Import the built-in suite modules exactly once (they self-register)."""
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    from repro.bench import suites  # noqa: F401  (import populates _REGISTRY)

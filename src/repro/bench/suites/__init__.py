@@ -1,0 +1,4 @@
+"""Built-in benchmark suites. Importing this package registers every bench
+(the registry imports it lazily on first lookup)."""
+
+from repro.bench.suites import aggregation, convergence, kernels, roofline, serve  # noqa: F401

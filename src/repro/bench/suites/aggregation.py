@@ -1,0 +1,133 @@
+"""Aggregation-strategy benches: every strategy in core/aggregation.py run
+under shard_map on the host mesh, with the wire-byte/density accounting from
+the ``AggInfo`` dicts the strategies already emit, plus the §6.1 wire-bits
+table over real parameter trees (port of benchmarks/compression.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.bench.artifact import Metric
+from repro.bench.measure import bytes_metric, time_fn, wall_metric
+from repro.bench.registry import register_bench
+from repro.core import aggregation
+from repro.core.compressors import ScaledSignCompressor, get_compressor, tree_wire_bits
+from repro.launch.mesh import make_host_mesh
+from repro.utils import compat
+
+STRATEGIES = ("dense", "ef_allgather", "ef_alltoall", "majority_vote")
+
+
+def _param_tree(seed: int = 0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {
+        "w1": jax.random.normal(k1, (256, 512)),
+        "w2": jax.random.normal(k2, (512, 128)),
+        "b": jax.random.normal(k3, (512,)),
+    }
+
+
+@register_bench("aggregation_strategies", suites=("aggregation", "smoke"))
+def aggregation_strategies(ctx):
+    """Per-strategy wall-clock + AggInfo wire-bytes/density on the host mesh
+    (1 device → W=1; the multi-device path is covered by tests/test_distributed)."""
+    mesh = make_host_mesh(data=1, model=1)
+    updates = _param_tree(ctx.seed)
+    n_params = sum(x.size for x in jax.tree.leaves(updates))
+    comp = ScaledSignCompressor()
+    metrics = []
+    for strategy in STRATEGIES:
+        state = aggregation.init_agg_state(strategy, updates, world=mesh.shape["data"])
+
+        def body(u, s, _strategy=strategy):
+            return aggregation.aggregate(_strategy, u, s, ("data",), comp)
+
+        fn = jax.jit(
+            compat.shard_map(
+                body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P(), P()),
+                manual_axes=("data",),
+            )
+        )
+        out, new_state, info = fn(updates, state)
+        jax.block_until_ready(out)
+        d = aggregation.info_dict(info)
+        cfg = {"strategy": strategy, "n_params": n_params, "world": mesh.shape["data"]}
+        metrics.append(
+            bytes_metric(f"agg_{strategy}_wire_bytes", d["wire_bytes_per_device"], config=cfg)
+        )
+        metrics.append(
+            Metric(
+                name=f"agg_{strategy}_density",
+                value=round(d["mean_density"], 4),
+                metric="density", unit="phi", config=cfg,
+                direction="match", tolerance=0.05,
+            )
+        )
+        iters = 3 if ctx.fast else 10
+        t = time_fn(fn, updates, state, iters=iters)
+        metrics.append(wall_metric(f"agg_{strategy}_step", t, config=cfg))
+    # cross-check the analytic wire models against the emitted info: the dense
+    # model is exact; the sign model is the single-leaf approximation of what
+    # agg_ef_allgather_wire_bytes reports (exact: Σ leaves (dᵢ/8 + 4))
+    world = mesh.shape["data"]
+    metrics.append(
+        bytes_metric("agg_dense_wire_model", aggregation.dense_wire_bytes(n_params))
+    )
+    metrics.append(
+        bytes_metric(
+            "agg_sign_allgather_wire_model",
+            aggregation.sign_allgather_wire_bytes(n_params, world),
+            config={"world": world},
+        )
+    )
+    return metrics
+
+
+@register_bench("wire_bits_accounting", suites=("aggregation", "smoke"))
+def wire_bits_accounting(ctx):
+    """§6.1's Σ(dᵢ+32)-bit claim over real parameter trees: exact wire bits
+    for dense/sign/top-k/qsgd, plus the ~32× sign reduction ratio."""
+    from repro.configs import ARCH_IDS, get_config, reduced
+    from repro.models import transformer as T
+
+    archs = ("llama3_2_1b",) if ctx.fast else tuple(ARCH_IDS)
+    comps = {
+        "dense": get_compressor("identity"),
+        "sign": get_compressor("scaled_sign"),
+        "top_k": get_compressor("top_k", k=64),
+        "qsgd4bit": get_compressor("qsgd", s=7),
+    }
+    metrics = []
+    for arch in archs:
+        cfg = reduced(get_config(arch))
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        bits = {name: tree_wire_bits(c, params) for name, c in comps.items()}
+        for name, b in bits.items():
+            metrics.append(
+                Metric(
+                    name=f"wire_{arch}_{name}_bits", value=float(b),
+                    metric="wire_bits", unit="bits",
+                    config={"arch": arch, "compressor": name},
+                    direction="match", tolerance=0.0,
+                )
+            )
+        metrics.append(
+            Metric(
+                name=f"wire_{arch}_sign_reduction",
+                value=round(bits["dense"] / bits["sign"], 2),
+                metric="wire_bits", unit="ratio", config={"arch": arch},
+                direction="higher", tolerance=0.01,
+            )
+        )
+        # analytic full-size numbers: Σᵢ(dᵢ+32) with dᵢ the real leaf sizes
+        full = get_config(arch)
+        total, _ = full.param_counts()
+        metrics.append(
+            bytes_metric(f"wire_{arch}_full_dense_bytes", total * 4.0, config={"arch": arch})
+        )
+        metrics.append(
+            bytes_metric(f"wire_{arch}_full_sign_bytes", total / 8.0, config={"arch": arch})
+        )
+    return metrics

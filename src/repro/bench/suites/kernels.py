@@ -1,0 +1,125 @@
+"""Kernel-stage benches: the fused EF-sign pipeline vs the unfused jnp
+pipeline (port of benchmarks/kernels_bench.py), the decompress-mean hot loop,
+and the modeled TPU HBM traffic. On CPU the Pallas path runs the jnp
+reference; a real Pallas-compile bench is registered for TPU and skips
+elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.artifact import Metric
+from repro.bench.measure import time_fn, wall_metric
+from repro.bench.registry import SkipBench, register_bench
+from repro.core.compressors import ScaledSignCompressor
+from repro.kernels import ops
+
+_FAST_SIZES = (1 << 16, 1 << 18)
+_FULL_SIZES = (1 << 16, 1 << 20, 1 << 23)
+# speedup ratios are only gated at sizes whose timings are macro (tens of ms
+# on CPU) — static, so the artifact's metric set never depends on machine speed
+_SPEEDUP_MIN_N = 1 << 22
+
+
+def _pipelines():
+    comp = ScaledSignCompressor()
+
+    @jax.jit
+    def unfused(g, e, gamma):
+        p = gamma * g + e
+        payload = comp.compress(p)
+        delta = comp.decompress(payload, g.shape[0])
+        return payload.words, payload.scale, p - delta
+
+    fused = lambda g, e, gamma: ops.ef_sign_step(g, e, gamma, force="ref")
+    return unfused, fused
+
+
+@register_bench("ef_sign_fused_vs_unfused", suites=("kernels", "smoke"))
+def ef_sign_fused_vs_unfused(ctx):
+    """Wall-clock of the fused EF-sign step vs the 4-pass jnp pipeline."""
+    unfused, fused = _pipelines()
+    sizes = _FAST_SIZES if ctx.fast else _FULL_SIZES
+    iters = 5 if ctx.fast else 20
+    metrics = []
+    for n in sizes:
+        g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+        e = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        gamma = jnp.float32(0.01)
+        t_un = time_fn(unfused, g, e, gamma, iters=iters)
+        t_fu = time_fn(fused, g, e, gamma, iters=iters)
+        cfg = {"n": n}
+        metrics.append(wall_metric(f"ef_sign_unfused_n{n}", t_un, config=cfg))
+        metrics.append(wall_metric(f"ef_sign_fusedref_n{n}", t_fu, config=cfg))
+        # a gated speedup ratio only makes sense on macro timings: the ratio
+        # of two sub-ms micro measurements swings >2× with scheduler noise
+        # (the wall metrics above still record the small sizes, and carry the
+        # artifact's absolute micro-timing slack). min-of-k is the robust
+        # estimator for the ratio.
+        if n >= _SPEEDUP_MIN_N:
+            metrics.append(
+                Metric(
+                    name=f"ef_sign_speedup_n{n}",
+                    value=round(t_un["min_us"] / t_fu["min_us"], 3),
+                    metric="speedup",
+                    unit="ratio",
+                    config=cfg,
+                    direction="higher",
+                    tolerance=0.5,
+                )
+            )
+    return metrics
+
+
+@register_bench("ef_sign_hbm_model", suites=("kernels", "smoke"))
+def ef_sign_hbm_model(ctx):
+    """Modeled HBM bytes/elem for the fused Pallas kernel vs composed XLA —
+    deterministic, pinned by the baseline gate (see kernels/ops.py)."""
+    fused = ops.modeled_hbm_bytes_per_elem(fused=True)
+    unfused = ops.modeled_hbm_bytes_per_elem(fused=False)
+    mk = lambda name, v: Metric(
+        name=name, value=round(v, 3), metric="hbm_model", unit="bytes/elem",
+        direction="match", tolerance=0.0,
+    )
+    return [
+        mk("ef_sign_model_bytes_fused", fused),
+        mk("ef_sign_model_bytes_unfused", unfused),
+        Metric(
+            name="ef_sign_model_traffic_ratio",
+            value=round(unfused / fused, 3),
+            metric="hbm_model", unit="ratio", direction="higher", tolerance=0.05,
+        ),
+    ]
+
+
+@register_bench("decompress_mean", suites=("kernels",))
+def decompress_mean(ctx):
+    """The all-gather decode hot loop: mean of W sign payloads."""
+    import numpy as np
+
+    metrics = []
+    for w in (4, 16):
+        rows = 256
+        rng = np.random.default_rng(w)
+        words = jnp.asarray(rng.integers(0, 2**32, size=(w, rows, 32), dtype=np.uint32))
+        scales = jnp.asarray(np.abs(rng.normal(size=(w,))).astype(np.float32))
+        fn = lambda a, b: ops.decompress_mean(a, b, force="ref")
+        t = time_fn(fn, words, scales, iters=10)
+        metrics.append(wall_metric(f"decompress_mean_w{w}_rows{rows}", t, config={"w": w, "rows": rows}))
+    return metrics
+
+
+@register_bench("ef_sign_pallas_compile", suites=("kernels",))
+def ef_sign_pallas_compile(ctx):
+    """Compiled (non-interpret) Pallas EF-sign step — TPU only; skips on
+    CPU/GPU the same way the tpu pytest marker does."""
+    if jax.default_backend() != "tpu":
+        raise SkipBench("Pallas compile path needs a TPU backend")
+    n = 1 << 20
+    g = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    e = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    gamma = jnp.float32(0.01)
+    fn = lambda g, e, gamma: ops.ef_sign_step(g, e, gamma, force="pallas")
+    t = time_fn(fn, g, e, gamma, iters=20)
+    return [wall_metric(f"ef_sign_pallas_n{n}", t, config={"n": n})]

@@ -1,0 +1,93 @@
+"""Roofline benches: summarize the dry-run JSON records written by
+``repro.launch.dryrun`` / ``benchmarks.perf_iter`` (port of
+benchmarks/roofline.py). The records themselves are produced out-of-process —
+the dry-run needs 512 fake host devices, which must be configured before jax
+init — so this suite only *reads*; it skips cleanly when no records exist."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.bench.artifact import Metric
+from repro.bench.registry import SkipBench, register_bench
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "..", "benchmarks", "results", "dryrun"
+)
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def dryrun_record_path(out_dir: str, arch: str, shape: str, mesh: str = "single",
+                       tag: str | None = None) -> str:
+    """Canonical record filename — shared by perf_iter writers and this reader."""
+    stem = f"{arch}__{shape}__{mesh}" + (f"__{tag}" if tag else "")
+    return os.path.join(out_dir, stem + ".json")
+
+
+def load_records(mesh: str = "single", tag: str | None = None, results_dir: str | None = None):
+    results_dir = results_dir or RESULTS_DIR
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}*.json"))):
+        stem = os.path.basename(path)[: -len(".json")]
+        parts = stem.split("__")
+        if tag is None and len(parts) > 3:
+            continue
+        if tag is not None and (len(parts) < 4 or parts[3] != tag):
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(mesh="single", tag=None) -> str:
+    """The EXPERIMENTS.md §Roofline table."""
+    recs = load_records(mesh, tag)
+    lines = [
+        "| arch | shape | policy/strategy | compute_s | memory_s | collective_s "
+        "| dominant | model/HLO flops | state+temp GiB/chip | fits? |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        m = r["memory"]
+        state = m.get("argument_size_in_bytes", 0)
+        temp = m.get("temp_size_in_bytes", 0)
+        gib = (state + temp) / 2**30
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['policy']}/{r['strategy']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| **{rf['dominant'].replace('_s','')}** "
+            f"| {r['useful_flops_ratio']:.3f} | {gib:.1f} "
+            f"| {'Y' if (state + temp) <= HBM_PER_CHIP else 'over'} |"
+        )
+    return "\n".join(lines)
+
+
+@register_bench("roofline_records", suites=("roofline",))
+def roofline_records(ctx):
+    """Dominant roofline term + useful-FLOPs fraction per recorded combo."""
+    recs = load_records("single")
+    if not recs:
+        raise SkipBench("no dry-run records under benchmarks/results/dryrun")
+    metrics = []
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        dom = r["roofline"]["dominant"]
+        cfg = {"arch": r["arch"], "shape": r["shape"], "dominant": dom}
+        metrics.append(
+            Metric(
+                name=f"{name}_{dom}", value=round(r["roofline"][dom], 4),
+                metric="roofline", unit="s", config=cfg,
+                direction="lower", tolerance=0.1,
+            )
+        )
+        metrics.append(
+            Metric(
+                name=f"{name}_useful_flops", value=round(r["useful_flops_ratio"], 3),
+                metric="roofline", unit="ratio", config=cfg,
+                direction="higher", tolerance=0.05,
+            )
+        )
+    return metrics

@@ -71,6 +71,30 @@ class AggInfo(NamedTuple):
     mean_density: jax.Array  # mean φ(p) over leaves (Lemma 8 quality)
 
 
+def info_dict(info: AggInfo) -> dict[str, float]:
+    """Pull an AggInfo off-device into plain floats.
+
+    The bench subsystem (repro.bench) and the training-loop metric stream both
+    consume this — it is the single place the wire-byte accounting crosses
+    from traced values to host-side records.
+    """
+    return {
+        "wire_bytes_per_device": float(info.wire_bytes_per_device),
+        "mean_density": float(info.mean_density),
+    }
+
+
+def dense_wire_bytes(n_params: int) -> float:
+    """Ring all-reduce wire model for fp32: ≈ 2·4·d bytes per device."""
+    return 2.0 * 4.0 * n_params
+
+
+def sign_allgather_wire_bytes(n_params: int, world: int) -> float:
+    """§6.1 accounting: (W−1) payloads of (d + 32·#leaves) bits received;
+    single-leaf approximation (d/8 + 4 bytes per payload)."""
+    return (world - 1) * (n_params / 8.0 + 4.0)
+
+
 class AggState(NamedTuple):
     worker_error: Any  # per-worker EF residual (pytree like params) or ()
     server_error: Any  # sharded server-side residual for double compression or ()
@@ -81,7 +105,10 @@ class AggState(NamedTuple):
 def _axis_size(axis_names: AxisNames) -> int:
     w = 1
     for a in axis_names:
-        w = w * lax.axis_size(a)
+        if hasattr(lax, "axis_size"):
+            w = w * lax.axis_size(a)
+        else:  # jax 0.4.x: psum of a Python 1 folds to the static axis size
+            w = w * lax.psum(1, a)
     return w
 
 

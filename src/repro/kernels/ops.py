@@ -87,3 +87,22 @@ def delta_from(words: jax.Array, scale: jax.Array, n: int, shape) -> jax.Array:
     """Reconstruct Δ = scale·sign(p) from a payload (for single-worker EF)."""
     out = ref.sign_decompress_ref(words, scale)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def modeled_hbm_bytes_per_elem(fused: bool) -> float:
+    """TPU-side HBM-traffic model for the EF-sign compression stage.
+
+    Fused Pallas kernel (two passes sharing reads):
+      L1 pass: read g + read e (8 B);  compress pass: read g + read e,
+      write e' (12 B), write words (4/32 B) → 20.125 B/elem.
+    Unfused XLA pipeline (each stage materializes):
+      p = γg+e (r8, w4); scale = Σ|p| (r4); words = pack(sign p) (r4, w1/8);
+      Δ = scale·unpack (r1/8, w4); e' = p−Δ (r8, w4) → 36.25 B/elem.
+
+    The ratio (~1.8×) is the roofline bound on the compression stage; the
+    kernels suite records both terms so the model is pinned by the baseline
+    gate and any change to it is an explicit diff.
+    """
+    if fused:
+        return 8.0 + 12.0 + 4.0 / 32.0
+    return (8 + 4) + 4 + (4 + 4 / 32) + (4 / 32 + 4) + (8 + 4)

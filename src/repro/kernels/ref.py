@@ -56,6 +56,12 @@ def sign_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array:
     """Decompress-and-average W payloads (the all-gather hot loop).
 
     words: (W, rows, 32) uint32;  scales: (W,) f32  →  (rows, LANE) f32.
+
+    Accumulates worker payloads sequentially — the same summation order as the
+    Pallas kernel's unrolled loop, so ref and kernel agree bit-for-bit.
     """
-    outs = jax.vmap(sign_decompress_ref)(words, scales)
-    return jnp.mean(outs, axis=0)
+    w = words.shape[0]
+    acc = jnp.zeros((words.shape[1], LANE), jnp.float32)
+    for i in range(w):
+        acc = acc + sign_decompress_ref(words[i], scales[i])
+    return acc / w

@@ -29,7 +29,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core import optim
 from repro.core.compressors import ScaledSignCompressor
 from repro.launch import specs as SP
-from repro.launch.mesh import ef_axis_names, make_production_mesh
+from repro.launch.mesh import ef_axis_names, make_production_mesh, use_mesh
 from repro.models.config import INPUT_SHAPES
 from repro.sharding.rules import ShardingRules, default_policy
 from repro.train import steps as steps_lib
@@ -136,7 +136,7 @@ def lower_combo(
         )
         args = (params_abs, cache_abs, dec_in["tokens"], dec_in["pos"])
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(
             bundle.fn, in_shardings=bundle.in_shardings, out_shardings=bundle.out_shardings
         )

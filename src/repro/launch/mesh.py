@@ -15,22 +15,40 @@ Topology (TPU v5e target):
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax ≥ 0.5: meshes carry explicit per-axis sharding modes
+    from jax.sharding import AxisType
+except ImportError:  # jax ≤ 0.4.x: every axis is implicitly Auto
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def use_mesh(mesh):
+    """Version-compat mesh context: ``jax.set_mesh`` where it exists (jax ≥
+    0.6), else the 0.4.x ``Mesh`` resource-env context manager — both make
+    ``mesh`` the ambient mesh for jit/shard_map inside the ``with`` block."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over however many (fake) devices the host exposes."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"), axis_types=(AxisType.Auto,) * 3
-        )
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def dp_axis_names(mesh) -> tuple[str, ...]:

@@ -22,6 +22,17 @@ from jax.sharding import PartitionSpec as P
 _state = threading.local()
 
 
+def _current_mesh():
+    """The ambient mesh: ``jax.sharding.get_abstract_mesh`` on jax ≥ 0.5,
+    else the 0.4.x resource-env physical mesh (set by ``use_mesh``)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
 def _ctx():
     return getattr(_state, "ctx", None)
 
@@ -45,7 +56,7 @@ def constrain(x: jax.Array, dims: str) -> jax.Array:
     ctx = _ctx()
     if ctx is None or (ctx["batch"] is None and ctx["model"] is None):
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _current_mesh()
     if mesh is None or mesh.empty:
         return x  # no mesh in context (single-device paths)
     spec = []
@@ -60,7 +71,7 @@ def constrain(x: jax.Array, dims: str) -> jax.Array:
 
 
 def _axes_size(axes) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _current_mesh()
     if mesh is None or mesh.empty:
         return 1 << 30  # no mesh → make divisibility fail → no constraint
     n = 1

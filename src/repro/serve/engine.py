@@ -12,6 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.launch.mesh import use_mesh
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.sharding.rules import ShardingRules
@@ -37,11 +38,14 @@ class DecodeEngine:
 
     # -------------------------------------------------------------- #
 
-    def _build(self, batch_size: int, prompt: dict):
-        cache = transformer.init_cache(
+    def _fresh_cache(self, batch_size: int):
+        return transformer.init_cache(
             self.cfg, batch_size, self.serve_cfg.max_len, self.serve_cfg.cache_dtype,
             with_memory=bool(self.cfg.encoder_layers),
         )
+
+    def _build(self, batch_size: int, prompt: dict):
+        cache = self._fresh_cache(batch_size)
         pre = steps_lib.make_prefill_step(
             self.cfg, self.mesh, self.rules,
             batch_example=prompt, cache_example=cache, params_example=self.params,
@@ -64,22 +68,63 @@ class DecodeEngine:
 
     def generate(self, prompt: dict, new_tokens: int, seed: int = 0):
         """prompt: {tokens (B,S), [patch_embeds], [frames]} → (B, new_tokens)."""
+        out, _ = self._generate(prompt, new_tokens, seed, timed=False)
+        return out
+
+    def generate_timed(self, prompt: dict, new_tokens: int, seed: int = 0):
+        """Like :meth:`generate` but fences every step and returns latency
+        stats: ``(tokens, {"prefill_us", "decode_us_per_token", "decode_us_median",
+        "tokens_per_s"})``. Used by the serve bench suite; the untimed path
+        stays free of host syncs."""
+        return self._generate(prompt, new_tokens, seed, timed=True)
+
+    def _generate(self, prompt: dict, new_tokens: int, seed: int, *, timed: bool):
+        import time as _time
+
         tokens = prompt["tokens"]
         b, s = tokens.shape
         cache = self._build(b, prompt)
         if self.cfg.encoder_layers and "frames" in prompt:
             cache["memory"] = transformer.encode(self.params, self.cfg, prompt["frames"])
-        with jax.set_mesh(self.mesh):
+        stats = None
+        with use_mesh(self.mesh):
+            if timed:
+                # warm the compile on a throwaway cache (prefill donates its
+                # cache argument) so prefill_us measures runtime, not jit
+                warm = self._fresh_cache(b)
+                if self.cfg.encoder_layers and "frames" in prompt:
+                    # copy: donation of warm must not invalidate the real cache
+                    warm["memory"] = jnp.copy(cache["memory"])
+                jax.block_until_ready(self._prefill(self.params, prompt, warm))
+            t0 = _time.perf_counter() if timed else 0.0
             logits, cache = self._prefill(self.params, prompt, cache)
+            if timed:
+                jax.block_until_ready(logits)
+                prefill_us = (_time.perf_counter() - t0) * 1e6
             key = jax.random.PRNGKey(seed)
             pos = s + (self.cfg.num_patch_tokens if self.cfg.num_patch_tokens and "patch_embeds" in prompt else 0)
             out = []
+            step_us = []
             tok = self._sample(logits, key)
             for i in range(new_tokens):
                 out.append(tok)
                 key, sub = jax.random.split(key)
+                t0 = _time.perf_counter() if timed else 0.0
                 logits, cache = self._decode(
                     self.params, cache, tok[:, None], jnp.int32(pos + i)
                 )
                 tok = self._sample(logits, sub)
-            return jnp.stack(out, axis=1)
+                if timed:
+                    jax.block_until_ready(tok)
+                    step_us.append((_time.perf_counter() - t0) * 1e6)
+            if timed:
+                # first decode step pays compile; steady-state excludes it
+                steady = step_us[1:] or step_us
+                median = sorted(steady)[len(steady) // 2] if steady else 0.0
+                stats = {
+                    "prefill_us": prefill_us,
+                    "decode_us_per_token": sum(steady) / len(steady) if steady else 0.0,
+                    "decode_us_median": median,
+                    "tokens_per_s": b * 1e6 / median if median else 0.0,
+                }
+            return jnp.stack(out, axis=1) if out else jnp.zeros((b, 0), jnp.int32), stats

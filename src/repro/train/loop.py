@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core import optim
 from repro.core.compressors import get_compressor
 from repro.data import synthetic
-from repro.launch.mesh import dp_axis_names, ef_axis_names
+from repro.launch.mesh import dp_axis_names, ef_axis_names, use_mesh
 from repro.models.config import ModelConfig
 from repro.sharding.rules import ShardingRules, default_policy
 from repro.train import checkpoint as ckpt
@@ -76,7 +76,7 @@ def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: C
     if batches is None:
         batches = synthetic.token_batches(job.seed, job.batch, job.seq, cfg.vocab_size)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = init_train_state(cfg, key, chain, job.strategy, mesh, ef_axes)
         example = next(batches)
         bundle = steps_lib.make_train_step(

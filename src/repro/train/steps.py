@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import aggregation, optim
 from repro.core.compressors import Compressor
 from repro.models import transformer
+from repro.utils import compat
 from repro.models.act_sharding import activation_sharding
 from repro.models.config import ModelConfig
 from repro.sharding.rules import ShardingRules
@@ -241,7 +242,7 @@ def make_train_step(
         return updates, _lift(opt_local), new_agg, loss, metrics
 
     manual = frozenset(ef_axes)
-    sharded_body = jax.shard_map(
+    sharded_body = compat.shard_map(
         worker_body,
         mesh=mesh,
         in_specs=_filter_manual((param_specs, batch_specs, opt_specs, agg_specs), manual),
@@ -249,8 +250,7 @@ def make_train_step(
             (param_specs, opt_specs, agg_specs, P(), {k: P() for k in metric_keys}),
             manual,
         ),
-        check_vma=False,
-        axis_names=manual,
+        manual_axes=manual,
     )
 
     def train_step(state: TrainState, batch):

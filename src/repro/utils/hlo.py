@@ -164,15 +164,30 @@ def _multipliers(comps: dict[str, _Comp]) -> dict[str, float]:
     return dict(mult)
 
 
+def _operand_names(rest: str) -> list[str]:
+    """Operand symbol names from an op call's argument list.
+
+    Handles both HLO operand styles: bare (``dot(%a, %b)`` / ``dot(a, b)``)
+    and typed (``dot(f32[2,3]{1,0} %a, ...)``) — the name is the last
+    whitespace token of each comma-separated operand.
+    """
+    call = rest.split(")", 1)[0]
+    names = re.findall(r"%([\w.\-]+)", call)
+    if names:
+        return names
+    # bare style: split on commas (none appear inside shapes here), last token
+    return [tok.strip().split()[-1] for tok in call.split(",") if tok.strip()]
+
+
 def _dot_flops(rtype: str, rest: str, symbols: dict[str, str]) -> float:
     out_shapes = _SHAPE_RE.findall(rtype)
     if not out_shapes:
         return 0.0
     out_elems = _shape_elems(out_shapes[0][1])
-    lhs_m = re.match(r"%?([\w.\-]+)", rest)
-    if not lhs_m:
+    operands = _operand_names(rest)
+    if not operands:
         return 0.0
-    lhs_type = symbols.get(lhs_m.group(1), "")
+    lhs_type = symbols.get(operands[0], "")
     lhs_shape = _SHAPE_RE.search(lhs_type)
     if not lhs_shape:
         return 0.0
@@ -201,9 +216,7 @@ _HBM_OPS = frozenset(
 
 def _operand_bytes(rest: str, symbols: dict[str, str]) -> int:
     total = 0
-    # operands are the %names before the closing paren of the op call
-    call = rest.split(")", 1)[0]
-    for nm in re.findall(r"%([\w.\-]+)", call):
+    for nm in _operand_names(rest):
         total += shape_bytes(symbols.get(nm, ""))
     return total
 

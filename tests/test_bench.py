@@ -1,0 +1,191 @@
+"""repro.bench subsystem: registry lookup, artifact schema, baseline gate."""
+
+import json
+
+import pytest
+
+from repro.bench import artifact
+from repro.bench.artifact import Metric
+from repro.bench.cli import main as bench_main
+from repro.bench.registry import (
+    KNOWN_SUITES,
+    BenchContext,
+    all_benches,
+    benches_for_suite,
+    get_bench,
+    register_bench,
+)
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_has_required_suites_populated():
+    for suite in ("kernels", "aggregation", "convergence", "serve", "smoke"):
+        assert benches_for_suite(suite), f"suite {suite!r} is empty"
+
+
+def test_registry_lookup_and_membership():
+    b = get_bench("ef_sign_fused_vs_unfused")
+    assert "kernels" in b.suites and "smoke" in b.suites
+    names = [x.name for x in all_benches()]
+    assert names == sorted(names) and len(names) == len(set(names))
+    with pytest.raises(KeyError):
+        get_bench("no_such_bench")
+    with pytest.raises(KeyError):
+        benches_for_suite("no_such_suite")
+
+
+def test_register_rejects_bad_suite_and_duplicates():
+    with pytest.raises(ValueError):
+        register_bench("x", suites=("not_a_suite",))(lambda ctx: [])
+    with pytest.raises(ValueError):
+        register_bench("ef_sign_fused_vs_unfused", suites=("kernels",))(lambda ctx: [])
+
+
+# ---------------------------------------------------------------- artifact schema
+
+
+def _metrics():
+    return [
+        Metric(name="t_wall", value=100000.0, metric="wall_time", unit="us",
+               direction="lower", tolerance=1.0),
+        Metric(name="bytes_moved", value=4096.0, metric="bytes", unit="bytes",
+               direction="match", tolerance=0.0),
+        Metric(name="speedup", value=2.0, metric="speedup", unit="ratio",
+               direction="higher", tolerance=0.25),
+    ]
+
+
+def test_artifact_roundtrip_and_schema(tmp_path):
+    path = artifact.write_artifact("smoke", _metrics(), str(tmp_path))
+    assert path.endswith("BENCH_smoke.json")
+    doc = artifact.load_artifact(path)
+    assert artifact.validate_document(doc) == []
+    assert doc["schema_version"] == artifact.SCHEMA_VERSION
+    assert doc["suite"] == "smoke"
+    assert {m["name"] for m in doc["metrics"]} == {"t_wall", "bytes_moved", "speedup"}
+    for m in doc["metrics"]:
+        for key in ("name", "metric", "unit", "value", "config", "direction", "tolerance"):
+            assert key in m
+
+
+def test_validate_document_flags_problems():
+    doc = artifact.to_document("smoke", _metrics())
+    doc["metrics"][0]["direction"] = "sideways"
+    del doc["metrics"][1]["unit"]
+    problems = artifact.validate_document(doc)
+    assert any("direction" in p for p in problems)
+    assert any("unit" in p for p in problems)
+
+
+def test_metric_rejects_bad_direction_and_tolerance():
+    with pytest.raises(ValueError):
+        Metric(name="x", value=1.0, direction="up")
+    with pytest.raises(ValueError):
+        Metric(name="x", value=1.0, tolerance=-1.0)
+
+
+# ---------------------------------------------------------------- baseline gate
+
+
+def _doc(values: dict[str, float]) -> dict:
+    base = {m.name: m for m in _metrics()}
+    metrics = [
+        Metric(name=k, value=v, metric=base[k].metric, unit=base[k].unit,
+               direction=base[k].direction, tolerance=base[k].tolerance)
+        for k, v in values.items()
+    ]
+    return artifact.to_document("smoke", metrics)
+
+
+def test_compare_passes_within_tolerance():
+    base = _doc({"t_wall": 100000.0, "bytes_moved": 4096.0, "speedup": 2.0})
+    cur = _doc({"t_wall": 150000.0, "bytes_moved": 4096.0, "speedup": 1.8})
+    assert artifact.compare(cur, base) == []
+
+
+def test_compare_flags_injected_regressions():
+    base = _doc({"t_wall": 100000.0, "bytes_moved": 4096.0, "speedup": 2.0})
+    # wall-clock 3× slower (tol 1.0 + 20 ms abs slack → >2.2× is a regression)
+    regs = artifact.compare(_doc({"t_wall": 300000.0, "bytes_moved": 4096.0, "speedup": 2.0}), base)
+    assert [r.name for r in regs] == ["t_wall"]
+    # deterministic bytes drifted (tol 0 → any change is a regression)
+    regs = artifact.compare(_doc({"t_wall": 100000.0, "bytes_moved": 8192.0, "speedup": 2.0}), base)
+    assert [r.name for r in regs] == ["bytes_moved"]
+    # higher-is-better dropped below slack
+    regs = artifact.compare(_doc({"t_wall": 100000.0, "bytes_moved": 4096.0, "speedup": 1.0}), base)
+    assert [r.name for r in regs] == ["speedup"]
+
+
+def test_compare_flags_missing_metric_as_coverage_loss():
+    base = _doc({"t_wall": 100000.0, "bytes_moved": 4096.0})
+    cur = _doc({"t_wall": 100000.0})
+    regs = artifact.compare(cur, base)
+    assert [r.name for r in regs] == ["bytes_moved"]
+    assert regs[0].current is None
+
+
+def test_compare_micro_timings_get_absolute_slack():
+    """Sub-millisecond wall-clock metrics inform but never gate (ABS_SLACK_US)."""
+    base = _doc({"t_wall": 400.0})
+    cur = _doc({"t_wall": 4000.0})  # 10x, but within the 20 ms absolute slack
+    assert artifact.compare(cur, base) == []
+
+
+def test_compare_info_and_abs_tolerance():
+    """'info' metrics never gate; abs_tolerance loosens zero-valued baselines."""
+    info_base = artifact.to_document("smoke", [
+        Metric(name="thru", value=500.0, metric="throughput", unit="tok/s", direction="info"),
+        Metric(name="ce_f", value=0.0, metric="objective", unit="f",
+               direction="match", tolerance=1.0, abs_tolerance=1e-2),
+    ])
+    cur = artifact.to_document("smoke", [
+        Metric(name="thru", value=1.0, metric="throughput", unit="tok/s", direction="info"),
+        Metric(name="ce_f", value=0.005, metric="objective", unit="f",
+               direction="match", tolerance=1.0, abs_tolerance=1e-2),
+    ])
+    assert artifact.compare(cur, info_base) == []
+    worse = artifact.to_document("smoke", [
+        Metric(name="thru", value=1.0, metric="throughput", unit="tok/s", direction="info"),
+        Metric(name="ce_f", value=0.5, metric="objective", unit="f",
+               direction="match", tolerance=1.0, abs_tolerance=1e-2),
+    ])
+    assert [r.name for r in artifact.compare(worse, info_base)] == ["ce_f"]
+
+
+def test_compare_ignores_new_metrics():
+    base = _doc({"t_wall": 100000.0})
+    cur = _doc({"t_wall": 100000.0, "speedup": 2.0})
+    assert artifact.compare(cur, base) == []
+
+
+# ---------------------------------------------------------------- cli end-to-end
+
+
+def test_cli_run_gate_roundtrip(tmp_path, monkeypatch):
+    """Run one cheap real bench through the CLI, re-gate against its own
+    artifact (exit 0), then against a perturbed baseline (exit 1)."""
+    out = tmp_path / "a"
+    rc = bench_main(["run", "--suite", "kernels", "--only", "ef_sign_hbm_model",
+                     "--out", str(out)])
+    assert rc == 0
+    path = artifact.artifact_path("kernels", str(out))
+    doc = artifact.load_artifact(path)
+    assert artifact.validate_document(doc) == []
+
+    rc = bench_main(["run", "--suite", "kernels", "--only", "ef_sign_hbm_model",
+                     "--out", str(tmp_path / "b"), "--baseline", path])
+    assert rc == 0
+
+    doc["metrics"][0]["value"] *= 2  # inject a regression into the baseline
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    rc = bench_main(["run", "--suite", "kernels", "--only", "ef_sign_hbm_model",
+                     "--out", str(tmp_path / "c"), "--baseline", str(bad)])
+    assert rc == 1
+
+
+def test_bench_context_fast_flag():
+    ctx = BenchContext(suite="smoke", fast=True)
+    assert ctx.fast and ctx.suite in KNOWN_SUITES

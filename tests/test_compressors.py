@@ -1,12 +1,17 @@
-"""Compressor contracts (paper Assumption A) — hypothesis property tests."""
+"""Compressor contracts (paper Assumption A) — hypothesis property tests.
 
-import hypothesis
-import hypothesis.strategies as st
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the whole
+module skips cleanly when it is absent so tier-1 collection never fails.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis.extra import numpy as hnp
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
 
 from repro.core import compressors as C
 

@@ -27,23 +27,24 @@ def test_counterexample_1_signsgd_ascends_in_expectation():
     # SIGNSGD: E[f(x − γ sign g)] − f(x) = +γ/8
     assert -gamma * e_sign / 4 > 0
 
-    # and empirically over the stochastic process:
-    key = jax.random.PRNGKey(0)
+    # and empirically over the stochastic process (numpy: the dynamics are
+    # scalar, so a long horizon is cheap — the SGD chain mixes slowly and a
+    # short window straddles the stationary mean of ≈ −0.1)
     for stepper, expect_down in [("sgd", True), ("sign", False)]:
-        x = jnp.float32(0.0)
+        rng = np.random.default_rng(0)
+        x = 0.0
         fs = []
-        for i in range(2000):
-            key, sub = jax.random.split(key)
-            g = jnp.where(jax.random.uniform(sub) < 0.25, 4.0, -1.0)
-            step = g if stepper == "sgd" else _sgn(g)
-            x = jnp.clip(x - gamma * step, -1.0, 1.0)
-            if i >= 1500:
-                fs.append(float(x) / 4)
+        for i in range(20000):
+            g = 4.0 if rng.uniform() < 0.25 else -1.0
+            step = g if stepper == "sgd" else (1.0 if g >= 0 else -1.0)
+            x = float(np.clip(x - gamma * step, -1.0, 1.0))
+            if i >= 5000:
+                fs.append(x / 4)
         f = float(np.mean(fs))  # time-average beats endpoint noise (±γ jumps)
         # the claim is directional: E[f] decreases under SGD, increases under
         # sign (boundary clipping keeps the stationary mean off ±0.25)
         if expect_down:
-            assert f < -0.1, f
+            assert f < -0.05, f
         else:
             assert f > 0.15, f
 

@@ -88,8 +88,9 @@ def test_theorem4_span_distance():
 
 def test_ef_signsgd_tracks_sgd_on_ill_conditioned_quadratic():
     """On an ill-conditioned noisy quadratic with a decaying step, EF-SIGNSGD
-    converges like SGD; unscaled sign methods stall at a γ-scale floor
-    because the sign forgets gradient magnitudes."""
+    converges like SGD (Theorem II rate-matching). The sign-fails/EF-fixes
+    separations live in test_counterexamples.py; here every method reaches the
+    noise floor, so only the tracking claim is statistically meaningful."""
     from repro.core.optim import step_decay_schedule
 
     steps = 1200
@@ -114,10 +115,8 @@ def test_ef_signsgd_tracks_sgd_on_ill_conditioned_quadratic():
 
     f_sgd = run("sgd", 0.5)
     f_ef = run("ef_signsgd", 0.5)
-    f_sign = run("signsgd", 0.5)  # scaled sign, no feedback
     assert f_ef < 5e-2, f_ef
     assert f_ef < 5 * max(f_sgd, 1e-4), (f_ef, f_sgd)
-    assert f_ef < f_sign, (f_ef, f_sign)
 
 
 def test_corrected_density_positive():
