@@ -33,7 +33,6 @@ VARIANTS = {
     "a2a": {"strategy": "ef_alltoall"},
     "dense": {"strategy": "dense"},
     # attention changes (llava_prefill)
-    "winslice": {"window_slicing": True},
     "winslice_c1k": {"window_slicing": True, "attn_chunk": 1024},
     "chunk1k": {"attn_chunk": 1024},
     # jamba memory/collective changes

@@ -27,7 +27,7 @@ import sys
 import time
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true", help="full-length nn_proxy run")
@@ -58,6 +58,7 @@ def main() -> None:
         suites = {args.only: suites[args.only]}
 
     all_rows = []
+    failures = 0
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         t0 = time.perf_counter()
@@ -65,6 +66,7 @@ def main() -> None:
             rows = fn()
         except Exception as e:  # a missing dry-run dir shouldn't kill the run
             print(f"{name}_ERROR,0,{type(e).__name__}", flush=True)
+            failures += 1
             continue
         wall = (time.perf_counter() - t0) * 1e6
         for r in rows:
@@ -76,7 +78,11 @@ def main() -> None:
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "bench_rows.json"), "w") as f:
         json.dump([list(r) for r in all_rows], f, indent=1)
+    # propagate failure like the repro.bench CLI does (exit 2 = bench error),
+    # so local regression runs fail loudly instead of printing _ERROR rows
+    # and exiting 0
+    return 2 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -34,7 +34,6 @@ import json
 import os
 import subprocess
 import time
-from typing import Any
 
 SCHEMA_VERSION = 1
 
@@ -201,6 +200,53 @@ def compare(current_doc: dict, baseline_doc: dict) -> list[Regression]:
                 )
             )
     return regressions
+
+
+def format_diff(current_doc: dict, baseline_doc: dict, *, markdown: bool = False) -> str:
+    """Render a per-metric delta table between two artifacts.
+
+    Covers the union of metric names: baseline metrics gate via
+    :func:`compare` (status REGRESSION/ok/missing), current-only metrics show
+    as ``new``. ``markdown=True`` emits a GitHub-flavored table for job
+    summaries.
+    """
+    current = {m["name"]: m for m in current_doc["metrics"]}
+    baseline = {m["name"]: m for m in baseline_doc["metrics"]}
+    bad = {r.name for r in compare(current_doc, baseline_doc)}
+    names = list(baseline) + [n for n in current if n not in baseline]
+    rows = []
+    for name in names:
+        base, cur = baseline.get(name), current.get(name)
+        if cur is None:
+            status, delta = "MISSING", ""
+        elif base is None:
+            status, delta = "new", ""
+        else:
+            status = "REGRESSION" if name in bad else "ok"
+            bv, cv = float(base["value"]), float(cur["value"])
+            delta = f"{(cv - bv) / abs(bv) * 100.0:+.1f}%" if bv else f"{cv - bv:+.3g}"
+        fmt = lambda m: "" if m is None else f"{float(m['value']):.6g}"
+        direction = (base or cur).get("direction", "")
+        rows.append((name, fmt(base), fmt(cur), delta, direction, status))
+    header = ("metric", "baseline", "current", "delta", "direction", "status")
+    if markdown:
+        lines = [
+            "| " + " | ".join(header) + " |",
+            "|" + "|".join("---" for _ in header) + "|",
+        ]
+        lines += ["| " + " | ".join(r) + " |" for r in rows]
+        n_bad = sum(r[5] in ("REGRESSION", "MISSING") for r in rows)
+        lines.append("")
+        lines.append(
+            f"**{len(rows)} metrics, {n_bad} regression(s)**"
+            if n_bad
+            else f"**{len(rows)} metrics, no regressions**"
+        )
+        return "\n".join(lines)
+    widths = [max(len(header[i]), *(len(r[i]) for r in rows)) if rows else len(header[i])
+              for i in range(len(header))]
+    line = lambda r: "  ".join(str(c).ljust(w) for c, w in zip(r, widths)).rstrip()
+    return "\n".join([line(header)] + [line(r) for r in rows])
 
 
 def format_report(regressions: list[Regression]) -> str:

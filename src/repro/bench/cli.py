@@ -2,9 +2,10 @@
 baseline.
 
     run --suite smoke [--baseline BENCH_smoke.json] [--out DIR] [--only NAME]
+    diff CURRENT BASELINE [--markdown]
     list
 
-Exit codes: 0 ok · 1 regression vs baseline · 2 bench error.
+Exit codes: 0 ok · 1 regression vs baseline · 2 bench/usage error.
 """
 
 from __future__ import annotations
@@ -66,6 +67,16 @@ def main(argv: list[str] | None = None) -> int:
     runp.add_argument("--only", default=None, help="run a single bench from the suite")
     runp.add_argument("--seed", type=int, default=0)
 
+    diffp = sub.add_parser(
+        "diff", help="render per-metric deltas between two artifacts"
+    )
+    diffp.add_argument("current", help="artifact from the run under test")
+    diffp.add_argument("baseline", help="reference artifact to diff against")
+    diffp.add_argument(
+        "--markdown", action="store_true",
+        help="GitHub-flavored table (for $GITHUB_STEP_SUMMARY)",
+    )
+
     sub.add_parser("list", help="list registered benches and their suites")
 
     args = ap.parse_args(argv)
@@ -75,6 +86,16 @@ def main(argv: list[str] | None = None) -> int:
             desc = b.description.splitlines()[0] if b.description else ""
             print(f"{b.name:32s} [{', '.join(b.suites)}] {desc}")
         return 0
+
+    if args.cmd == "diff":
+        try:
+            current = artifact.load_artifact(args.current)
+            baseline = artifact.load_artifact(args.baseline)
+        except (OSError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        print(artifact.format_diff(current, baseline, markdown=args.markdown))
+        return 1 if artifact.compare(current, baseline) else 0
 
     # resolve usage errors (unknown suite/bench, unreadable baseline) before
     # spending minutes running benches

@@ -1,4 +1,11 @@
 """Built-in benchmark suites. Importing this package registers every bench
 (the registry imports it lazily on first lookup)."""
 
-from repro.bench.suites import aggregation, convergence, kernels, roofline, serve  # noqa: F401
+from repro.bench.suites import (  # noqa: F401
+    aggregation,
+    comm,
+    convergence,
+    kernels,
+    roofline,
+    serve,
+)

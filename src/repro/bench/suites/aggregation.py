@@ -6,7 +6,6 @@ table over real parameter trees (port of benchmarks/compression.py)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.bench.artifact import Metric

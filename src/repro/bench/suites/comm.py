@@ -1,0 +1,179 @@
+"""Comm-layer benches: bucket layout build, per-bucket compress / all-gather
+decode hot loops, and exact per-step wire-byte accounting for every bucketed
+strategy (cross-checked against the analytic models in core/aggregation.py).
+
+Run ``python -m repro.bench run --suite comm`` for the BENCH_comm.json
+artifact; the cheap deterministic subset also rides in ``smoke``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.artifact import Metric
+from repro.bench.measure import bytes_metric, time_fn, wall_metric
+from repro.bench.registry import register_bench
+from repro.comm import bucketize, collective, compressed
+from repro.core import aggregation
+from repro.core.compressors import ScaledSignCompressor, get_compressor
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+BUCKET_SIZE = 1 << 14  # 16384 elems — many buckets even on reduced configs
+
+
+def _layout_for(arch: str, bucket_size: int = BUCKET_SIZE):
+    from repro.configs import get_config, reduced
+    from repro.models import transformer
+
+    cfg = reduced(get_config(arch))
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+    return bucketize.build_layout(shapes, bucket_size)
+
+
+@register_bench("comm_bucket_layout", suites=("comm", "smoke"))
+def comm_bucket_layout(ctx):
+    """BucketLayout build cost over real param specs + the static layout
+    facts (bucket count, padding overhead) the wire accounting hangs off."""
+    from repro.configs import ARCH_IDS
+
+    archs = ("llama3_2_1b",) if ctx.fast else tuple(ARCH_IDS)[:4]
+    metrics = []
+    for arch in archs:
+        t = time_fn(lambda a=arch: _layout_for(a), iters=3 if ctx.fast else 10, warmup=1)
+        layout = _layout_for(arch)
+        cfg_d = {"arch": arch, "bucket_size": BUCKET_SIZE}
+        metrics.append(wall_metric(f"comm_layout_build_{arch}", t, config=cfg_d))
+        metrics.append(
+            Metric(
+                name=f"comm_layout_{arch}_n_buckets", value=float(layout.n_buckets),
+                metric="layout", unit="buckets", config=cfg_d,
+                direction="match", tolerance=0.0,
+            )
+        )
+        metrics.append(
+            Metric(
+                name=f"comm_layout_{arch}_padding_overhead",
+                value=round(layout.padding_overhead, 6),
+                metric="layout", unit="fraction", config=cfg_d,
+                # padding waste is pure overhead: growing it is a regression
+                direction="lower", tolerance=0.05,
+            )
+        )
+    return metrics
+
+
+@register_bench("comm_bucket_compress", suites=("comm", "smoke"))
+def comm_bucket_compress(ctx):
+    """Per-bucket EF sign compress + W-payload decode-mean hot loops, plus the
+    exact per-bucket wire cost of each compressor family."""
+    nb, bs = (8, BUCKET_SIZE) if ctx.fast else (32, BUCKET_SIZE)
+    rng_g, rng_e = jax.random.split(jax.random.PRNGKey(ctx.seed))
+    g = jax.random.normal(rng_g, (nb, bs))
+    e = jax.random.normal(rng_e, (nb, bs)) * 0.1
+    comp = ScaledSignCompressor()
+    iters = 5 if ctx.fast else 20
+    cfg_d = {"n_buckets": nb, "bucket_size": bs}
+    metrics = []
+
+    encode = jax.jit(lambda g, e: compressed.ef_encode_buckets(comp, g, e))
+    t = time_fn(encode, g, e, iters=iters)
+    metrics.append(wall_metric("comm_ef_encode_buckets", t, config=cfg_d))
+
+    payload, _, _ = encode(g, e)
+    for w in (4,) if ctx.fast else (4, 16):
+        gathered = compressed.BucketPayload(
+            data=jax.tree.map(lambda x: jnp.stack([x] * w), payload.data)
+        )
+        dec = jax.jit(lambda p: compressed.decode_mean_buckets(comp, p, bs))
+        t = time_fn(dec, gathered, iters=iters)
+        metrics.append(
+            wall_metric(f"comm_decode_mean_w{w}", t, config=dict(cfg_d, w=w))
+        )
+
+    # per-bucket wire bytes: the schema-pinned accounting unit of the layer
+    for name, c in (
+        ("sign", comp),
+        ("top_k", get_compressor("top_k", k=64)),
+        ("qsgd4bit", get_compressor("qsgd", s=7)),
+        ("dense", get_compressor("identity")),
+    ):
+        metrics.append(
+            bytes_metric(
+                f"comm_wire_bytes_per_bucket_{name}",
+                c.wire_bits(bs) / 8.0,
+                config={"bucket_size": bs, "compressor": name},
+            )
+        )
+    return metrics
+
+
+@register_bench("comm_step_wire_accounting", suites=("comm", "smoke"))
+def comm_step_wire_accounting(ctx):
+    """End-to-end bucketed aggregate per strategy on the host mesh: wall
+    clock, emitted AggInfo wire bytes/density, and the analytic bucketed wire
+    models at production world sizes (the deterministic gate)."""
+    mesh = make_host_mesh(data=1, model=1)
+    layout = _layout_for("llama3_2_1b")
+    comp = ScaledSignCompressor()
+    nb, bs = layout.n_buckets, layout.bucket_size
+    key = jax.random.PRNGKey(ctx.seed)
+    buckets = tuple(
+        jax.random.normal(jax.random.fold_in(key, gi), (1, g.n_buckets, bs))
+        for gi, g in enumerate(layout.groups)
+    )
+    iters = 3 if ctx.fast else 10
+    metrics = []
+    with use_mesh(mesh):
+        for strategy in collective.STRATEGIES:
+            has_err = strategy.startswith("ef_")
+            err = tuple(jnp.zeros_like(b) for b in buckets) if has_err else ()
+            srv = (
+                tuple(s[None] for s in compressed.init_server_buckets(layout, 1))
+                if strategy == "ef_alltoall"
+                else ()
+            )
+            agg = collective.make_bucketed_aggregator(
+                strategy, comp, layout, mesh, ("data",)
+            )
+            fn = jax.jit(lambda b, e, s, k, _agg=agg: _agg(b, e, s, k))
+            out = fn(buckets, err, srv, key)
+            jax.block_until_ready(out)
+            info = out[3]
+            cfg_d = {"strategy": strategy, "n_buckets": nb, "bucket_size": bs, "world": 1}
+            metrics.append(
+                bytes_metric(
+                    f"comm_{strategy}_wire_bytes",
+                    float(info.wire_bytes_per_device),
+                    config=cfg_d,
+                )
+            )
+            metrics.append(
+                Metric(
+                    name=f"comm_{strategy}_density",
+                    value=round(float(info.mean_density), 4),
+                    metric="density", unit="phi", config=cfg_d,
+                    direction="match", tolerance=0.05,
+                )
+            )
+            t = time_fn(fn, buckets, err, srv, key, iters=iters)
+            metrics.append(wall_metric(f"comm_{strategy}_step", t, config=cfg_d))
+    # analytic wire models at the production world sizes (W = 16 data / 2 pods)
+    for world in (2, 16):
+        metrics.append(
+            bytes_metric(
+                f"comm_model_allgather_wire_w{world}",
+                aggregation.bucketed_sign_allgather_wire_bytes(nb, bs, world),
+                config={"world": world, "n_buckets": nb, "bucket_size": bs},
+            )
+        )
+        metrics.append(
+            bytes_metric(
+                f"comm_model_alltoall_wire_w{world}",
+                aggregation.bucketed_sign_alltoall_wire_bytes(nb, bs, world),
+                config={"world": world, "n_buckets": nb, "bucket_size": bs},
+            )
+        )
+    return metrics

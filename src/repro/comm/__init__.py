@@ -1,0 +1,52 @@
+"""Bucketed, overlap-ready gradient-communication layer.
+
+Real distributed-training systems do not ship gradients leaf-by-leaf: they
+flatten the gradient pytree into fixed-size, dtype-homogeneous *buckets* and
+run compression + collectives per bucket (dist-EF-SGD, Zheng et al. '19;
+PyTorch DDP's gradient bucketing). This package supplies that wire path for
+every :class:`repro.core.compressors.Compressor`:
+
+``bucketize``
+    :class:`BucketLayout` — a static flatten/unflatten plan computed once per
+    parameter spec — plus the flatten/unflatten executors.
+``compressed``
+    Per-bucket compression with error feedback: encode ``p_b = u_b + e_b``,
+    decode-and-average gathered payloads, per-bucket wire/density accounting.
+``collective``
+    The mesh collectives, run under **fully-manual** ``shard_map`` over every
+    mesh axis so jax 0.4.37's partial-manual ``IsManualSubgroup`` abort is
+    never reachable (collectives over a manual subgroup while other axes stay
+    auto is exactly the broken configuration; see tests/test_distributed.py).
+
+The per-leaf strategies in :mod:`repro.core.aggregation` remain the
+``bucket_size=None`` fallback — they preserve leaf shardings (no flatten), at
+the cost of per-leaf payloads and the partial-manual collective path.
+"""
+
+from repro.comm.bucketize import (
+    BucketLayout,
+    build_layout,
+    flatten_buckets,
+    unflatten_buckets,
+)
+from repro.comm.collective import make_bucketed_aggregator
+from repro.comm.compressed import (
+    BucketPayload,
+    decode_mean_buckets,
+    ef_encode_buckets,
+    init_error_buckets,
+    init_server_buckets,
+)
+
+__all__ = [
+    "BucketLayout",
+    "BucketPayload",
+    "build_layout",
+    "decode_mean_buckets",
+    "ef_encode_buckets",
+    "flatten_buckets",
+    "init_error_buckets",
+    "init_server_buckets",
+    "make_bucketed_aggregator",
+    "unflatten_buckets",
+]

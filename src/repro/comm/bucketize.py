@@ -1,0 +1,177 @@
+"""Static bucket layout: flatten a gradient pytree into fixed-size buckets.
+
+A :class:`BucketLayout` is computed ONCE per parameter spec (shapes + dtypes
+only — works on ``jax.eval_shape`` results, no device data needed) and then
+drives jit-compatible flatten/unflatten executors. Leaves are grouped by
+dtype (dtype-homogeneous buckets: a real wire format ships bf16 and fp32
+payloads separately), concatenated in tree-flatten order, zero-padded to a
+whole number of ``bucket_size``-element buckets, and viewed as
+``(n_buckets, bucket_size)``.
+
+Padding rules:
+  * ``bucket_size`` must be a multiple of 32 so packed-sign payloads have no
+    intra-bucket ragged words;
+  * only the LAST bucket of each group carries padding; ``group.valid`` is
+    the true element count and :func:`valid_mask` the static mask used to
+    keep error-feedback residuals out of the padded tail.
+
+Flattening deliberately trades GSPMD leaf-sharding preservation for a
+realistic wire path (fixed-size payloads, one collective per bucket stream) —
+the per-leaf strategies in ``repro.core.aggregation`` remain available for
+giant fsdp-sharded models via ``bucket_size=None``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_SIZE = 1 << 16  # 65536 elems = 256 KiB fp32 — DDP-scale buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside its dtype group's flat span."""
+
+    group: int  # index into BucketLayout.groups
+    offset: int  # element offset into the group's (unpadded) flat span
+    size: int
+    shape: tuple[int, ...]
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketGroup:
+    """One dtype-homogeneous run of buckets."""
+
+    dtype: Any
+    valid: int  # true element count (before padding)
+    n_buckets: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static flatten/unflatten plan for one pytree structure."""
+
+    bucket_size: int
+    treedef: Any
+    slots: tuple[LeafSlot, ...]  # one per leaf, tree-flatten order
+    groups: tuple[BucketGroup, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(g.n_buckets for g in self.groups)
+
+    @property
+    def n_elements(self) -> int:
+        return sum(g.valid for g in self.groups)
+
+    @property
+    def padded_elements(self) -> int:
+        return self.n_buckets * self.bucket_size
+
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of transmitted elements that are padding."""
+        pad = self.padded_elements - self.n_elements
+        return pad / self.padded_elements if self.padded_elements else 0.0
+
+    def wire_bits(self, comp) -> int:
+        """Exact per-step bits on the wire: every bucket is one fixed-size
+        payload of ``comp.wire_bits(bucket_size)`` bits."""
+        return self.n_buckets * comp.wire_bits(self.bucket_size)
+
+
+def build_layout(tree, bucket_size: int = DEFAULT_BUCKET_SIZE) -> BucketLayout:
+    """Compute the static bucket layout of ``tree`` (arrays or ShapeDtypeStructs)."""
+    if bucket_size <= 0 or bucket_size % 32 != 0:
+        raise ValueError(f"bucket_size must be a positive multiple of 32, got {bucket_size}")
+    leaves, treedef = jax.tree.flatten(tree)
+    group_order: list[Any] = []  # dtype, in first-appearance order
+    group_sizes: dict[Any, int] = {}
+    slots = []
+    for leaf in leaves:
+        dt = jnp.dtype(leaf.dtype)
+        if dt not in group_sizes:
+            group_order.append(dt)
+            group_sizes[dt] = 0
+        slots.append(
+            LeafSlot(
+                group=group_order.index(dt),
+                offset=group_sizes[dt],
+                size=int(leaf.size),
+                shape=tuple(leaf.shape),
+                dtype=dt,
+            )
+        )
+        group_sizes[dt] += int(leaf.size)
+    groups = tuple(
+        BucketGroup(
+            dtype=dt,
+            valid=group_sizes[dt],
+            n_buckets=max(1, -(-group_sizes[dt] // bucket_size)),
+        )
+        for dt in group_order
+    )
+    return BucketLayout(
+        bucket_size=bucket_size,
+        treedef=treedef,
+        slots=tuple(slots),
+        groups=groups,
+    )
+
+
+def flatten_buckets(layout: BucketLayout, tree) -> tuple[jax.Array, ...]:
+    """Pytree → one ``(n_buckets, bucket_size)`` fp32 array per dtype group.
+
+    All compression/EF math runs in fp32 regardless of the group dtype; the
+    group dtype drives the cast back in :func:`unflatten_buckets` (and the
+    wire-byte model of a mixed-precision transport).
+    """
+    leaves = jax.tree.leaves(tree)
+    if len(leaves) != len(layout.slots):
+        raise ValueError(f"tree has {len(leaves)} leaves, layout expects {len(layout.slots)}")
+    per_group: list[list[jax.Array]] = [[] for _ in layout.groups]
+    for slot, leaf in zip(layout.slots, leaves):
+        if tuple(leaf.shape) != slot.shape:
+            raise ValueError(f"leaf shape {leaf.shape} != layout shape {slot.shape}")
+        per_group[slot.group].append(leaf.reshape(-1).astype(jnp.float32))
+    out = []
+    for group, parts in zip(layout.groups, per_group):
+        flat = jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+        pad = group.n_buckets * layout.bucket_size - group.valid
+        flat = jnp.pad(flat, (0, pad))
+        out.append(flat.reshape(group.n_buckets, layout.bucket_size))
+    return tuple(out)
+
+
+def unflatten_buckets(layout: BucketLayout, buckets: tuple[jax.Array, ...]):
+    """Inverse of :func:`flatten_buckets`; leaves are cast back to group dtype."""
+    if len(buckets) != len(layout.groups):
+        raise ValueError(f"got {len(buckets)} bucket arrays, layout has {len(layout.groups)}")
+    flats = []
+    for group, b in zip(layout.groups, buckets):
+        if b.shape != (group.n_buckets, layout.bucket_size):
+            raise ValueError(f"bucket array {b.shape} != ({group.n_buckets}, {layout.bucket_size})")
+        flats.append(b.reshape(-1))
+
+    def leaf_view(slot: LeafSlot) -> jax.Array:
+        flat = flats[slot.group][slot.offset : slot.offset + slot.size]
+        return flat.reshape(slot.shape).astype(slot.dtype)
+
+    return jax.tree.unflatten(layout.treedef, [leaf_view(s) for s in layout.slots])
+
+
+def valid_mask(layout: BucketLayout, group_index: int) -> jax.Array:
+    """(n_buckets, bucket_size) f32 mask: 1 on real elements, 0 on padding.
+
+    Error-feedback residuals are multiplied by this so the padded tail never
+    accumulates phantom error (sign-decode emits ±scale even where p == 0).
+    """
+    group = layout.groups[group_index]
+    idx = jnp.arange(group.n_buckets * layout.bucket_size)
+    mask = (idx < group.valid).astype(jnp.float32)
+    return mask.reshape(group.n_buckets, layout.bucket_size)

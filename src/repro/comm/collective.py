@@ -1,0 +1,190 @@
+"""Bucketed gradient collectives under fully-manual ``shard_map``.
+
+Every strategy here runs with **all** mesh axes manual. That is the load-
+bearing design decision: jaxlib 0.4.x's SPMD partitioner aborts
+(``Check failed: sharding.IsManualSubgroup()``) whenever a collective — or
+even a ``lax.scan`` — appears inside a *partial*-manual ``shard_map``, which
+is why the per-leaf EF strategies in ``repro.core.aggregation`` were
+version-keyed xfails. Buckets are dense per-worker stacks with no intra-leaf
+sharding left to preserve, so nothing needs to stay GSPMD-auto: the
+aggregator body sees its worker's ``(n_buckets, bucket_size)`` slice, runs
+per-bucket compression + EF, and exchanges fixed-size payloads with plain
+manual collectives. Devices that share a worker (model-parallel replicas)
+run the identical exchange redundantly — payloads are tiny (that is the
+point of compression) and the result is replicated where the update needs
+to land anyway.
+
+Strategies (mirroring ``repro.core.aggregation``):
+
+``dense``          pmean of raw buckets — wire ≈ 2·4·d bytes (ring model).
+``ef_allgather``   compress → all-gather payloads → decode-mean; worker EF.
+``ef_alltoall``    double compression: workers chunk the bucket stream,
+                   all-to-all routes chunk *j* to worker *j* (the "server"
+                   for those buckets), which decode-means, re-compresses with
+                   a server-side EF residual, and all-gathers the result.
+                   Wire ≈ 2·d/8 bytes, W-independent.
+``majority_vote``  sign-of-sum-of-signs, no EF (the known-brittle baseline).
+
+Wire accounting is exact per bucket: a payload for one bucket costs
+``comp.wire_bits(bucket_size)`` bits and every strategy counts how many
+bucket payloads each device *receives* per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import bucketize, compressed
+from repro.core.aggregation import AggInfo
+from repro.core.compressors import Compressor, ScaledSignCompressor
+from repro.utils import compat
+
+AxisNames = tuple[str, ...]
+
+_EF_STRATEGIES = ("ef_allgather", "ef_alltoall")
+STRATEGIES = ("dense",) + _EF_STRATEGIES + ("majority_vote",)
+
+
+def world_size(mesh, ef_axes: AxisNames) -> int:
+    w = 1
+    for a in ef_axes:
+        w *= mesh.shape[a]
+    return w
+
+
+def _worker_index(ef_axes: AxisNames) -> jax.Array:
+    """Linearized index of this device's EF worker (row-major over ef_axes)."""
+    idx = jnp.int32(0)
+    for a in ef_axes:
+        size = lax.psum(1, a)  # static on both jax dialects
+        idx = idx * size + lax.axis_index(a)
+    return idx
+
+
+def _gather_payload(payload, ef_axes: AxisNames):
+    """all-gather every payload leaf along a new leading worker axis."""
+    return jax.tree.map(lambda x: lax.all_gather(x, ef_axes, tiled=False), payload)
+
+
+def _pad_buckets(x: jax.Array, target: int) -> jax.Array:
+    """Zero-pad the bucket axis of (nb, bs) up to ``target`` buckets."""
+    return jnp.pad(x, ((0, target - x.shape[0]), (0, 0)))
+
+
+def make_bucketed_aggregator(
+    strategy: str,
+    comp: Compressor | None,
+    layout: bucketize.BucketLayout,
+    mesh,
+    ef_axes: AxisNames,
+):
+    """Build ``fn(buckets_w, err_w, srv_w, key) -> (agg, new_err_w, new_srv_w,
+    info)`` where the ``_w`` pytrees carry a leading stacked EF-world axis
+    sharded over ``ef_axes`` and ``agg`` is the replicated aggregated update,
+    one ``(n_buckets, bucket_size)`` fp32 array per dtype group.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown bucketed strategy {strategy!r}; options: {STRATEGIES}")
+    comp = comp or ScaledSignCompressor()
+    if strategy == "ef_alltoall" and not compressed._is_sign(comp):
+        raise ValueError("ef_alltoall supports sign compressors (wire format)")
+    w = world_size(mesh, ef_axes)
+    bs = layout.bucket_size
+    ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
+    masks = tuple(bucketize.valid_mask(layout, gi) for gi in range(len(layout.groups)))
+    bucket_bits = comp.wire_bits(bs)
+    has_err = strategy in _EF_STRATEGIES
+    has_srv = strategy == "ef_alltoall"
+
+    def body(buckets, err, srv, key):
+        outs, new_errs, new_srvs, dens = [], [], [], []
+        wire_bits = 0.0
+        widx = _worker_index(ef_axes)
+        for gi, local in enumerate(zip(buckets, err if has_err else buckets)):
+            b = local[0][0]  # (nb, bs) this worker's buckets for group gi
+            e = local[1][0] if has_err else None
+            nb = b.shape[0]
+            gkey = None
+            if not comp.deterministic:
+                gkey = jax.random.fold_in(jax.random.fold_in(key, widx), gi)
+
+            if strategy == "dense":
+                outs.append(lax.pmean(b, ef_axes))
+                dens.append(jnp.float32(1.0))
+                wire_bits += 2 * 32 * nb * bs  # fp32 ring all-reduce model
+
+            elif strategy == "majority_vote":
+                s = jnp.where(b >= 0, 1.0, -1.0)
+                tot = lax.psum(s, ef_axes)
+                outs.append(jnp.where(tot >= 0, 1.0, -1.0) * masks[gi])
+                dens.append(jnp.float32(1.0))
+                wire_bits += (w - 1) * nb * bs  # d bits per peer payload
+
+            elif strategy == "ef_allgather":
+                payload, ne, d_b = compressed.ef_encode_buckets(
+                    comp, b, e, mask=masks[gi], key=gkey
+                )
+                gathered = _gather_payload(payload, ef_axes)
+                outs.append(compressed.decode_mean_buckets(comp, gathered, bs))
+                new_errs.append(ne[None])
+                dens.append(jnp.mean(d_b))
+                wire_bits += (w - 1) * nb * bucket_bits
+
+            else:  # ef_alltoall — double compression over bucket shards
+                nbw = compressed.server_shard_buckets(nb, w)
+                bp, ep = _pad_buckets(b, w * nbw), _pad_buckets(e, w * nbw)
+                mp = _pad_buckets(masks[gi], w * nbw)
+                payload, ne, d_b = compressed.ef_encode_buckets(comp, bp, ep, mask=mp)
+                new_errs.append(ne[:nb][None])
+                dens.append(jnp.mean(d_b[:nb]))
+                # route shard j of every worker's stream to worker j
+                shards = jax.tree.map(lambda x: x.reshape(w, nbw, *x.shape[1:]), payload)
+                routed = jax.tree.map(
+                    lambda x: lax.all_to_all(x, ef_axes, split_axis=0, concat_axis=0, tiled=True),
+                    shards,
+                )
+                s_j = compressed.decode_mean_buckets(comp, routed, bs)  # (nbw, bs)
+                # server-side EF re-compression of the mean shard
+                srv_mask = lax.dynamic_slice_in_dim(mp, widx * nbw, nbw, axis=0)
+                q_payload, new_sv, _ = compressed.ef_encode_buckets(
+                    comp, s_j, srv[gi][0], mask=srv_mask
+                )
+                new_srvs.append(new_sv[None])
+                gathered = _gather_payload(q_payload, ef_axes)  # leaves (w, nbw, ...)
+                flat = jax.tree.map(lambda x: x.reshape(w * nbw, *x.shape[2:]), gathered)
+                full = compressed.decode_buckets(comp, compressed.BucketPayload(data=flat.data), bs)
+                outs.append(full[:nb])
+                # a2a: recv (w−1) shards of nbw payloads; ag: recv (w−1) more
+                wire_bits += 2 * (w - 1) * nbw * bucket_bits
+
+        info = AggInfo(
+            wire_bytes_per_device=jnp.float32(wire_bits / 8.0),
+            mean_density=lax.pmean(jnp.mean(jnp.stack(dens)), ef_axes),
+        )
+        return (
+            tuple(outs),
+            tuple(new_errs) if has_err else (),
+            tuple(new_srvs) if has_srv else (),
+            info,
+        )
+
+    n_groups = len(layout.groups)
+    stacked = tuple(P(ef) for _ in range(n_groups))
+    in_specs = (
+        stacked,
+        stacked if has_err else (),
+        stacked if has_srv else (),
+        P(),
+    )
+    out_specs = (
+        tuple(P() for _ in range(n_groups)),
+        stacked if has_err else (),
+        stacked if has_srv else (),
+        AggInfo(wire_bytes_per_device=P(), mean_density=P()),
+    )
+    return compat.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, manual_axes=None
+    )

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 
-from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.config import ModelConfig
 
 ARCH_IDS = [
     "granite_moe_1b_a400m",

@@ -1,8 +1,14 @@
-"""Distributed gradient aggregation strategies.
+"""Distributed gradient aggregation strategies (per-LEAF granularity).
 
 The paper analyses single-worker EF-SGD and explicitly names the multi-worker
 extension as future work (§7). This module supplies that extension — it is the
 piece that turns the paper's operator into a *distributed systems* feature.
+
+This is the ``bucket_size=None`` fallback of the gradient-exchange stack: the
+default training path runs the same strategies at fixed-size-BUCKET
+granularity through :mod:`repro.comm` (realistic wire format, fully-manual
+collectives that survive jaxlib 0.4.x). The per-leaf implementations below
+remain for the giant-model dry-run because they are *sharding-preserving*.
 
 All functions here run **inside** ``shard_map`` over the data-parallel mesh
 axes (``('data',)`` single-pod tp / ``('pod',)`` multi-pod); the remaining
@@ -95,6 +101,19 @@ def sign_allgather_wire_bytes(n_params: int, world: int) -> float:
     return (world - 1) * (n_params / 8.0 + 4.0)
 
 
+def bucketed_sign_allgather_wire_bytes(n_buckets: int, bucket_size: int, world: int) -> float:
+    """Bucketed ef_allgather wire model: (W−1) sign payloads per bucket, each
+    bucket_size bits + one fp32 scale (repro.comm exchange granularity)."""
+    return (world - 1) * n_buckets * (bucket_size / 8.0 + 4.0)
+
+
+def bucketed_sign_alltoall_wire_bytes(n_buckets: int, bucket_size: int, world: int) -> float:
+    """Bucketed double compression: each device receives (W−1) bucket-shard
+    payloads in the all-to-all and (W−1) more in the final all-gather."""
+    shard = -(-n_buckets // world)
+    return 2.0 * (world - 1) * shard * (bucket_size / 8.0 + 4.0)
+
+
 class AggState(NamedTuple):
     worker_error: Any  # per-worker EF residual (pytree like params) or ()
     server_error: Any  # sharded server-side residual for double compression or ()
@@ -125,12 +144,39 @@ def init_agg_state(
     world: int = 1,
     seed: int = 0,
     error_dtype=jnp.float32,
+    bucket_size: int | None = None,
 ) -> AggState:
     """Build the aggregation state matching ``strategy``.
 
-    ``world`` is the EF world size; the double-compression server error is
-    sharded by chunk — each worker holds one last-axis chunk per leaf.
+    ``world`` is the EF world size. With ``bucket_size`` set (the default
+    training path, :mod:`repro.comm`) residuals are held per BUCKET — fp32
+    ``(n_buckets, bucket_size)`` stacks per dtype group — and the
+    double-compression server error is one bucket shard per worker. With
+    ``bucket_size=None`` (per-leaf fallback) residuals mirror the param tree
+    and the server error is sharded by last-axis chunk.
     """
+    if bucket_size is not None:
+        # local import: repro.comm depends on this module for AggInfo
+        from repro.comm import bucketize, compressed
+
+        layout = bucketize.build_layout(params, bucket_size)
+        worker_error = (
+            compressed.init_error_buckets(layout)
+            if strategy in ("ef_allgather", "ef_alltoall")
+            else ()
+        )
+        server_error = (
+            compressed.init_server_buckets(layout, world)
+            if strategy == "ef_alltoall"
+            else ()
+        )
+        return AggState(
+            worker_error=worker_error,
+            server_error=server_error,
+            key=jax.random.PRNGKey(seed),
+            steps=jnp.int32(0),
+        )
+
     zeros = lambda x: jnp.zeros(x.shape, error_dtype)
     worker_error: Any = ()
     server_error: Any = ()

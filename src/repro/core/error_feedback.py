@@ -24,7 +24,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import Compressor, compress_tree, density
+from repro.core.compressors import Compressor, density
 
 
 class EFState(NamedTuple):

@@ -17,13 +17,12 @@ cosine, linear warmup.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import Compressor, ScaledSignCompressor, density
+from repro.core.compressors import Compressor, ScaledSignCompressor
 from repro.core.error_feedback import EFState, ef_step, init_ef_state
 
 Schedule = Callable[[jax.Array], jax.Array]

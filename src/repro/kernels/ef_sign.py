@@ -113,6 +113,99 @@ def ef_sign_compress(
 
 
 # ---------------------------------------------------------------------------
+# whole-bucket variants (repro.comm): one grid step per BUCKET, per-bucket
+# scale. A bucket is a (bucket_size,) slice of the flattened grad stream;
+# bucket_size % LANE == 0 keeps the pack's reduction axis in-register and the
+# word row a whole number of 128-lane tiles. γ is folded into the update by
+# the optimizer chain before bucketing, so p = g + e here.
+# ---------------------------------------------------------------------------
+
+
+def _bucket_l1_kernel(g_ref, e_ref, out_ref):
+    p = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(jnp.abs(p), axis=-1)
+
+
+def bucket_l1(g, e, *, interpret: bool = False):
+    """Per-bucket L1 of p = g + e: (nb, bs) → (nb,)."""
+    nb, bs = g.shape
+    return pl.pallas_call(
+        _bucket_l1_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=interpret,
+    )(g, e)
+
+
+def _bucket_ef_sign_kernel(scale_ref, g_ref, e_ref, words_ref, e_new_ref):
+    scale = scale_ref[0]
+    p = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    bits = (p >= 0).astype(jnp.uint32)  # (1, bs)
+    bs = bits.shape[-1]
+    b = bits.reshape(1, bs // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words_ref[...] = jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+    delta = scale * (2.0 * bits.astype(jnp.float32) - 1.0)
+    e_new_ref[...] = p - delta
+
+
+def bucket_ef_sign_compress(g, e, scales, *, interpret: bool = False):
+    """(nb, bs) p = g+e → ((nb, bs/32) u32 packed signs, (nb, bs) residual)."""
+    nb, bs = g.shape
+    return pl.pallas_call(
+        _bucket_ef_sign_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),  # per-bucket scale
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs // 32), lambda i: (i, 0)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bs // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, bs), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scales, g, e)
+
+
+def _bucket_decompress_mean_kernel(scales_ref, words_ref, out_ref, *, w: int):
+    # words block: (w, 1, bs/32); scales: (w, 1); out: (1, bs)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for i in range(w):  # w is static; unrolled vector loop
+        wd = words_ref[i]  # (1, bs/32)
+        bits = (wd[..., None] >> shifts) & jnp.uint32(1)
+        signs = 2.0 * bits.reshape(out_ref.shape).astype(jnp.float32) - 1.0
+        acc = acc + scales_ref[i, 0] * signs
+    out_ref[...] = acc / w
+
+
+def bucket_sign_decompress_mean(words, scales, *, interpret: bool = False):
+    """(W, nb, bs/32) u32 + (W, nb) scales → (nb, bs) mean of ±scaleᵢᵦ."""
+    w, nb, m = words.shape
+    return pl.pallas_call(
+        functools.partial(_bucket_decompress_mean_kernel, w=w),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((w, 1), lambda i: (0, i)),
+            pl.BlockSpec((w, 1, m), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m * 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m * 32), jnp.float32),
+        interpret=interpret,
+    )(scales, words)
+
+
+# ---------------------------------------------------------------------------
 # decompress-and-mean over W gathered payloads
 # ---------------------------------------------------------------------------
 

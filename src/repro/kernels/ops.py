@@ -83,6 +83,65 @@ def decompress_mean(words: jax.Array, scales: jax.Array, *, force: str | None = 
     return ref.sign_decompress_mean_ref(words, scales)
 
 
+BUCKET_PALLAS_MULTIPLE = 4096  # bs/32 words must tile the 128-lane registers
+
+
+def _bucket_use_pallas(force: str | None, bs: int) -> tuple[bool, bool]:
+    use_pallas, interpret = _use_pallas(force)
+    if bs % BUCKET_PALLAS_MULTIPLE != 0 and force != "pallas":
+        return False, False
+    return use_pallas, interpret
+
+
+@functools.partial(jax.jit, static_argnames=("fixed_scale", "force"))
+def ef_sign_bucket_step(
+    g: jax.Array,
+    e: jax.Array,
+    *,
+    fixed_scale: float | None = None,
+    force: str | None = None,
+):
+    """Fused EF sign compression of a whole bucket stack (repro.comm path).
+
+    ``g``/``e`` are (n_buckets, bucket_size) f32 (update and EF residual);
+    returns ``(words (nb, bs/32) u32, scales (nb,) f32, e_new (nb, bs) f32)``.
+    Scaled sign uses the per-bucket L1 mean ‖p_b‖₁/bs (the padded tail of the
+    last bucket is zero, deflating its scale slightly — EF absorbs the
+    difference and the unflatten slice discards the tail); ``fixed_scale``
+    selects the unscaled-sign wire format instead.
+    """
+    nb, bs = g.shape
+    if bs % 32 != 0:
+        raise ValueError(f"bucket_size must be a multiple of 32, got {bs}")
+    use_pallas, interpret = _bucket_use_pallas(force, bs)
+    if fixed_scale is not None:
+        scales = jnp.full((nb,), fixed_scale, jnp.float32)
+    elif use_pallas:
+        scales = ef_sign.bucket_l1(g, e, interpret=interpret) / float(bs)
+    else:
+        scales = ref.bucket_l1_ref(g, e) / float(bs)
+    if use_pallas:
+        words, e_new = ef_sign.bucket_ef_sign_compress(g, e, scales, interpret=interpret)
+    else:
+        words, e_new = ref.bucket_ef_sign_compress_ref(g, e, scales)
+    return words, scales, e_new
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def bucket_decompress_mean(words: jax.Array, scales: jax.Array, *, force: str | None = None):
+    """Mean of W bucket payload stacks: (W, nb, bs/32) + (W, nb) → (nb, bs)."""
+    use_pallas, interpret = _bucket_use_pallas(force, words.shape[-1] * 32)
+    if use_pallas:
+        return ef_sign.bucket_sign_decompress_mean(words, scales, interpret=interpret)
+    return ref.bucket_decompress_mean_ref(words, scales)
+
+
+def bucket_sign_decode(words: jax.Array, scales: jax.Array, bucket_size: int) -> jax.Array:
+    """Single payload stack decode: (nb, bs/32) + (nb,) → (nb, bs)."""
+    del bucket_size  # implied by the word count; kept for call-site clarity
+    return ref.bucket_sign_decode_ref(words, scales)
+
+
 def delta_from(words: jax.Array, scale: jax.Array, n: int, shape) -> jax.Array:
     """Reconstruct Δ = scale·sign(p) from a payload (for single-worker EF)."""
     out = ref.sign_decompress_ref(words, scale)

@@ -52,6 +52,60 @@ def sign_decompress_ref(words: jax.Array, scale: jax.Array) -> jax.Array:
     return scale * signs
 
 
+# ---------------------------------------------------------------------------
+# whole-bucket variants (repro.comm): per-BUCKET scales instead of one global
+# scale. Layout: (n_buckets, bucket_size) f32, bucket_size % 32 == 0, each
+# bucket packing into bucket_size/32 uint32 words.
+# ---------------------------------------------------------------------------
+
+
+def bucket_l1_ref(g: jax.Array, e: jax.Array) -> jax.Array:
+    """Per-bucket L1 of p = g + e.  (nb, bs) → (nb,)."""
+    p = g.astype(jnp.float32) + e.astype(jnp.float32)
+    return jnp.sum(jnp.abs(p), axis=-1)
+
+
+def bucket_ef_sign_compress_ref(
+    g: jax.Array, e: jax.Array, scales: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused per-bucket EF sign compression.
+
+    p      = g + e                              (nb, bs)
+    words  = bitpack(p ≥ 0)                     (nb, bs/32) uint32
+    e_new  = p − scales[b]·sign(p)              (nb, bs) f32
+    """
+    p = g.astype(jnp.float32) + e.astype(jnp.float32)
+    nb, bs = p.shape
+    bits = (p >= 0).astype(jnp.uint32)
+    b = bits.reshape(nb, bs // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words = jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+    delta = scales[:, None] * (2.0 * bits.astype(jnp.float32) - 1.0)
+    return words, p - delta
+
+
+def bucket_sign_decode_ref(words: jax.Array, scales: jax.Array) -> jax.Array:
+    """(nb, bs/32) u32 + (nb,) scales → (nb, bs) f32 of ±scaleᵦ."""
+    nb, m = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    signs = 2.0 * bits.reshape(nb, m * 32).astype(jnp.float32) - 1.0
+    return scales[:, None] * signs
+
+
+def bucket_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array:
+    """Decompress-and-average W bucket payload stacks.
+
+    words: (W, nb, bs/32) u32; scales: (W, nb) f32 → (nb, bs) f32. Sequential
+    accumulation (same order as the Pallas kernel's unrolled loop).
+    """
+    w = words.shape[0]
+    acc = jnp.zeros((words.shape[1], words.shape[2] * 32), jnp.float32)
+    for i in range(w):
+        acc = acc + bucket_sign_decode_ref(words[i], scales[i])
+    return acc / w
+
+
 def sign_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array:
     """Decompress-and-average W payloads (the all-gather hot loop).
 

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced as make_reduced
 from repro.launch.mesh import make_host_mesh

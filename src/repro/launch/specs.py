@@ -13,7 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.config import InputShape, ModelConfig
 
 S = jax.ShapeDtypeStruct
 

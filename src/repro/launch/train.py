@@ -15,8 +15,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-
 from repro.configs import get_config, reduced as make_reduced
 from repro.launch.mesh import make_host_mesh
 from repro.train.loop import TrainJob, run_training
@@ -41,6 +39,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument(
+        "--bucket-size", type=int, default=None,
+        help="comm-bucket elements (default: repro.comm's 65536; 0 = per-leaf path)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -48,13 +50,16 @@ def main():
     if args.reduced:
         cfg = make_reduced(cfg)
     mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
+    kw = {}
+    if args.bucket_size is not None:
+        kw["bucket_size"] = args.bucket_size or None  # 0 → per-leaf fallback
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
         lr=args.lr, momentum=args.momentum, weight_decay=args.weight_decay,
         optimizer=args.optimizer, strategy=args.strategy,
         compressor=args.compressor, policy=args.policy, seed=args.seed,
         microbatches=args.microbatches,
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, **kw,
     )
     _, history = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))
     print(f"final_loss={history[-1]['loss']:.4f}")

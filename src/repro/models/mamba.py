@@ -90,7 +90,6 @@ def ssm_scan(
 ):
     """Selective scan, chunked. Returns (y (B,S,di), h_last)."""
     bsz, s, di = x.shape
-    st = a.shape[-1]
     nchunks = max(1, (s + chunk - 1) // chunk)
     pad = nchunks * chunk - s
 

@@ -15,7 +15,6 @@ sliding-window — and (conv, ssm) state for mamba positions).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any
 
 import jax

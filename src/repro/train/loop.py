@@ -3,18 +3,16 @@
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 import time
 from typing import Any, Callable, Iterator
 
 import jax
-import jax.numpy as jnp
 
+from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
 from repro.core import optim
 from repro.core.compressors import get_compressor
 from repro.data import synthetic
-from repro.launch.mesh import dp_axis_names, ef_axis_names, use_mesh
+from repro.launch.mesh import ef_axis_names, use_mesh
 from repro.models.config import ModelConfig
 from repro.sharding.rules import ShardingRules, default_policy
 from repro.train import checkpoint as ckpt
@@ -42,6 +40,9 @@ class TrainJob:
     ckpt_dir: str = ""
     lr_schedule: str = "step_decay"  # the paper's /10-decimation schedule
     microbatches: int = 1  # gradient accumulation (M sequential passes)
+    # gradient-exchange granularity: fixed-size buckets through repro.comm
+    # (the default wire path); None falls back to per-leaf aggregation
+    bucket_size: int | None = DEFAULT_BUCKET_SIZE
 
 
 def _local_chain(job: TrainJob) -> optim.Transform:
@@ -76,13 +77,17 @@ def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: C
     if batches is None:
         batches = synthetic.token_batches(job.seed, job.batch, job.seq, cfg.vocab_size)
 
+    bucket_size = job.bucket_size if job.strategy != "dense" else None
     with use_mesh(mesh):
-        state = init_train_state(cfg, key, chain, job.strategy, mesh, ef_axes)
+        state = init_train_state(
+            cfg, key, chain, job.strategy, mesh, ef_axes, bucket_size=bucket_size
+        )
         example = next(batches)
         bundle = steps_lib.make_train_step(
             cfg, mesh, rules,
             strategy=job.strategy, comp=comp, local_chain=chain, ef_axes=ef_axes,
             batch_example=example, state_example=state, microbatches=job.microbatches,
+            bucket_size=bucket_size,
         )
         state = jax.device_put(state, bundle.in_shardings[0])
         step_fn = bundle.jit()

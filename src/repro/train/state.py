@@ -39,11 +39,17 @@ def init_train_state(
     mesh=None,
     ef_axes: tuple[str, ...] = (),
     error_dtype=jnp.float32,
+    bucket_size: int | None = None,
 ) -> TrainState:
+    """``bucket_size`` must match the value later passed to
+    ``make_train_step`` — it selects bucketed (repro.comm) vs per-leaf EF
+    residual layout."""
     params = transformer.init_params(cfg, key)
     opt_state = local_chain.init(params)
     w = ef_world(mesh, ef_axes) if mesh is not None and ef_axes else 1
-    agg = aggregation.init_agg_state(strategy, params, world=w, error_dtype=error_dtype)
+    agg = aggregation.init_agg_state(
+        strategy, params, world=w, error_dtype=error_dtype, bucket_size=bucket_size
+    )
     if ef_axes:
         agg = agg._replace(
             worker_error=_broadcast_worker_state(agg.worker_error, w),
@@ -54,9 +60,14 @@ def init_train_state(
     return TrainState(params=params, opt_state=opt_state, agg_state=agg, step=jnp.int32(0))
 
 
-def abstract_train_state(cfg, key, local_chain, strategy, mesh, ef_axes, error_dtype=jnp.float32):
+def abstract_train_state(
+    cfg, key, local_chain, strategy, mesh, ef_axes, error_dtype=jnp.float32,
+    bucket_size: int | None = None,
+):
     """eval_shape'd TrainState for dry-run lowering (no allocation)."""
     return jax.eval_shape(
-        lambda k: init_train_state(cfg, k, local_chain, strategy, mesh, ef_axes, error_dtype),
+        lambda k: init_train_state(
+            cfg, k, local_chain, strategy, mesh, ef_axes, error_dtype, bucket_size
+        ),
         key,
     )

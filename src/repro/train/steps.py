@@ -1,18 +1,29 @@
 """Distributed train / prefill / decode step builders.
 
-Two gradient-exchange paths share the loss code (DESIGN.md §5):
+Three gradient-exchange paths share the loss code (DESIGN.md §5):
 
 ``dense``
     one ``jax.jit``; GSPMD inserts the fp32 gradient all-reduce/reduce-scatter
     — the SGD communication baseline. (An EF *optimizer* may still be used —
     that is the paper's single-worker Algorithm 2 applied per param shard.)
 
-EF strategies (``ef_allgather`` / ``ef_alltoall`` / ``majority_vote``)
-    ``jax.shard_map`` manual over the EF worker axes (data axis single-pod,
-    pod axis multi-pod) with every other mesh axis left in GSPMD-auto mode,
-    so tensor/expert/fsdp parallelism keeps working *inside* each worker.
-    Per-worker grads → worker-local momentum → compressed exchange from
-    :mod:`repro.core.aggregation` → identical aggregated update everywhere.
+Bucketed EF strategies (the default wire path, ``bucket_size`` set)
+    Per-worker grads come from a ``vmap`` over an explicit leading EF-worker
+    axis (batch reshaped ``(W, B/W, ...)``) inside the ordinary GSPMD-auto
+    world — no ``shard_map`` around the model, so tensor/expert/fsdp
+    parallelism, remat, and the layer-stack ``lax.scan`` all compose
+    untouched. Updates are flattened into fixed-size buckets
+    (:mod:`repro.comm.bucketize`) and exchanged by the fully-manual
+    collective in :mod:`repro.comm.collective` — the only ``shard_map`` in
+    the step, with every mesh axis manual, which is what keeps jaxlib
+    0.4.x's partial-manual ``IsManualSubgroup`` abort unreachable.
+
+Per-leaf EF strategies (``bucket_size=None`` fallback)
+    The original ``shard_map``-around-the-model path: manual over the EF
+    worker axes with every other mesh axis GSPMD-auto, compressing leaf by
+    leaf (:mod:`repro.core.aggregation`). Preserves intra-leaf shardings (no
+    flatten), so it remains the choice for the giant-model dry-run — but the
+    partial-manual configuration aborts on jaxlib 0.4.x.
 
 Worker-local state (EF residuals, momentum traces) is stacked on a leading
 EF-world axis and sharded over the EF axes; see ``state_specs``.
@@ -20,7 +31,6 @@ EF-world axis and sharded over the EF axes; see ``state_specs``.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -28,6 +38,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm import bucketize as comm_bucketize
+from repro.comm import collective as comm_collective
 from repro.core import aggregation, optim
 from repro.core.compressors import Compressor
 from repro.models import transformer
@@ -154,6 +166,7 @@ def make_train_step(
     batch_example: Any,
     state_example: TrainState,
     microbatches: int = 1,
+    bucket_size: int | None = None,
 ) -> StepBundle:
     param_specs = rules.param_specs(state_example.params)
     opt_specs_base = jax.tree.map(
@@ -191,9 +204,18 @@ def make_train_step(
         })))
         return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0,))
 
-    # ---------------- EF strategies: shard_map over the EF worker axes ----
+    # ---------------- EF strategies: bucketed comm layer (default) --------
     assert ef_axes, "EF strategies need at least one manual worker axis"
-    auto = frozenset(mesh.axis_names) - set(ef_axes)
+    if bucket_size is not None:
+        return _make_bucketed_ef_step(
+            cfg, mesh, rules, strategy=strategy, comp=comp, local_chain=local_chain,
+            ef_axes=ef_axes, batch_example=batch_example, state_example=state_example,
+            microbatches=microbatches, bucket_size=bucket_size,
+            param_specs=param_specs, opt_specs_base=opt_specs_base,
+            batch_specs=batch_specs,
+        )
+
+    # ---------------- per-leaf fallback: shard_map over the EF worker axes
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
 
     has_worker_err = bool(jax.tree.leaves(state_example.agg_state.worker_error))
@@ -266,10 +288,110 @@ def make_train_step(
     return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0,))
 
 
+def _make_bucketed_ef_step(
+    cfg: ModelConfig,
+    mesh,
+    rules: ShardingRules,
+    *,
+    strategy: str,
+    comp: Compressor | None,
+    local_chain: optim.Transform,
+    ef_axes: tuple[str, ...],
+    batch_example: Any,
+    state_example: TrainState,
+    microbatches: int,
+    bucket_size: int,
+    param_specs,
+    opt_specs_base,
+    batch_specs,
+) -> StepBundle:
+    """EF train step through the bucketed comm layer (see module docstring)."""
+    ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
+    w = comm_collective.world_size(mesh, ef_axes)
+    layout = comm_bucketize.build_layout(state_example.params, bucket_size)
+    agg_fn = comm_collective.make_bucketed_aggregator(
+        strategy, comp, layout, mesh, ef_axes
+    )
+
+    auto_dp = tuple(a for a in rules.dp_axes if a not in ef_axes)
+    grad_fn = _make_grad_fn(
+        cfg, microbatches, lambda: activation_sharding(auto_dp or None, "model")
+    )
+
+    def _split_workers(x):
+        b = x.shape[0]
+        assert b % w == 0, f"batch dim {b} not divisible by EF world {w}"
+        return x.reshape(w, b // w, *x.shape[1:])
+
+    auto_dp_size = comm_collective.world_size(mesh, auto_dp)
+
+    def _worker_sharding(leaf):
+        inner = auto_dp if (auto_dp and leaf.shape[1] % auto_dp_size == 0) else None
+        return NamedSharding(mesh, P(ef, inner, *([None] * (leaf.ndim - 2))))
+
+    grad_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, _prepend(s, ef)), param_specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+    def train_step(state: TrainState, batch):
+        wb = jax.tree.map(_split_workers, batch)
+        wb = jax.tree.map(
+            lambda x: lax.with_sharding_constraint(x, _worker_sharding(x)), wb
+        )
+        # per-worker grads: vmap over the leading EF-worker axis, params
+        # broadcast — pure GSPMD-auto, composes with tp/fsdp/remat/scan
+        (loss_w, metrics_w), grads_w = jax.vmap(
+            lambda b: grad_fn(state.params, b)
+        )(wb)
+        grads_w = lax.with_sharding_constraint(grads_w, grad_shardings)
+        updates_w, opt_state = jax.vmap(
+            lambda g, o: local_chain.update(g, o, state.params)
+        )(grads_w, state.opt_state)
+        buckets_w = jax.vmap(lambda u: comm_bucketize.flatten_buckets(layout, u))(
+            updates_w
+        )
+        key, sub = jax.random.split(state.agg_state.key)
+        agg_buckets, new_err, new_srv, info = agg_fn(
+            buckets_w,
+            state.agg_state.worker_error,
+            state.agg_state.server_error,
+            sub,
+        )
+        updates = comm_bucketize.unflatten_buckets(layout, agg_buckets)
+        params = optim.apply_updates(state.params, updates)
+        new_agg = aggregation.AggState(
+            worker_error=new_err,
+            server_error=new_srv,
+            key=key,
+            steps=state.agg_state.steps + 1,
+        )
+        loss = jnp.mean(loss_w)
+        metrics = {k: jnp.mean(v) for k, v in metrics_w.items()}
+        metrics["wire_bytes"] = info.wire_bytes_per_device
+        metrics["density"] = info.mean_density
+        new_state = TrainState(params, opt_state, new_agg, state.step + 1)
+        return new_state, (loss, metrics)
+
+    agg_specs = aggregation.AggState(
+        worker_error=jax.tree.map(lambda _: P(ef), state_example.agg_state.worker_error),
+        server_error=jax.tree.map(lambda _: P(ef), state_example.agg_state.server_error),
+        key=P(),
+        steps=P(),
+    )
+    opt_specs = _worker_state_specs(opt_specs_base, ef_axes)
+    state_specs = TrainState(
+        params=param_specs, opt_state=opt_specs, agg_state=agg_specs, step=P()
+    )
+    metric_keys = ("loss", "moe_aux_loss", "moe_z_loss", "wire_bytes", "density")
+    in_sh = (rules.named(state_specs), rules.named(batch_specs))
+    out_sh = (rules.named(state_specs), rules.named((P(), {k: P() for k in metric_keys})))
+    return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0,))
+
+
 def _opt_specs(rules: ShardingRules, state_example: TrainState):
     """Momentum traces etc. mirror param sharding; scalar states replicated."""
     param_specs = rules.param_specs(state_example.params)
-    leaves_by_shape = {}
 
     def rule(path, leaf):
         # TraceState/AdamState leaves mirror params by shape; counters scalar

@@ -1,0 +1,233 @@
+"""Bucketed comm layer: layout algebra, sign-packing edge cases (including
+the ``pack_signs_last``/``unpack_signs_last`` word-boundary cases), per-bucket
+EF compression, and the single-device collective path.
+
+These are deterministic (no hypothesis dependency) so the packing edge cases
+stay covered even where ``tests/test_compressors.py`` skips.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import bucketize, collective, compressed
+from repro.core import aggregation
+from repro.core import compressors as C
+from repro.kernels import ef_sign, ops, ref
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+# ---------------------------------------------------------------------------
+# sign packing edge cases: n % 32 ∈ {0, 1, 31}, empty leaves
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [32, 64, 1, 33, 31, 63, 95])
+def test_pack_signs_last_word_boundaries(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(3, n)).astype(np.float32))
+    words = C.pack_signs_last(x)
+    assert words.shape == (3, C.packed_len(n))
+    signs = C.unpack_signs_last(words, n)
+    np.testing.assert_array_equal(np.asarray(signs) > 0, np.asarray(x) >= 0)
+    # padding bits beyond n are zero — payloads are bit-exact comparable
+    if n % 32:
+        tail = np.asarray(words)[:, -1]
+        assert not np.any(tail >> (n % 32)), "padding bits must be zero"
+
+
+@pytest.mark.parametrize("n", [0, 1, 31, 32, 33])
+def test_pack_signs_flat_word_boundaries(n):
+    rng = np.random.default_rng(n + 100)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    words = C.pack_signs(x)
+    assert words.shape == (C.packed_len(n),)
+    back = C.unpack_signs(words, n)
+    assert back.shape == (n,)
+    if n:
+        np.testing.assert_array_equal(np.asarray(back) > 0, np.asarray(x) >= 0)
+
+
+def test_pack_signs_last_empty_leaf():
+    x = jnp.zeros((4, 0), jnp.float32)
+    words = C.pack_signs_last(x)
+    assert words.shape == (4, 0)
+    assert C.unpack_signs_last(words, 0).shape == (4, 0)
+
+
+# ---------------------------------------------------------------------------
+# bucket layout
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "a": jnp.arange(37 * 11, dtype=jnp.float32).reshape(37, 11),
+        "b": jnp.arange(5, dtype=jnp.float32).astype(jnp.bfloat16),
+        "c": -jnp.arange(301, dtype=jnp.float32),
+    }
+
+
+def test_layout_groups_by_dtype_and_pads():
+    layout = bucketize.build_layout(_tree(), 128)
+    assert [str(g.dtype) for g in layout.groups] == ["float32", "bfloat16"]
+    f32, bf16 = layout.groups
+    assert f32.valid == 37 * 11 + 301 and f32.n_buckets == 6  # ceil(708/128)
+    assert bf16.valid == 5 and bf16.n_buckets == 1
+    assert layout.n_buckets == 7
+    assert 0.0 < layout.padding_overhead < 0.25
+    # wire accounting is exact per bucket
+    assert layout.wire_bits(C.ScaledSignCompressor()) == 7 * (128 + 32)
+
+
+def test_layout_rejects_non_multiple_of_32():
+    with pytest.raises(ValueError):
+        bucketize.build_layout(_tree(), 100)
+
+
+def test_bucket_boundary_split_roundtrip():
+    """A leaf larger than bucket_size splits across buckets and reassembles."""
+    tree = _tree()
+    layout = bucketize.build_layout(tree, 64)  # 'a' (407 elems) spans 7 buckets
+    buckets = bucketize.flatten_buckets(layout, tree)
+    # element k of 'a' lands at (k // 64, k % 64) of the f32 group stream
+    a = np.asarray(tree["a"]).reshape(-1)
+    g0 = np.asarray(buckets[0])
+    for k in (0, 63, 64, 65, 301, 406):  # straddles every boundary kind
+        assert g0[k // 64, k % 64] == a[k]
+    # 'c' starts at offset 407 → mid-bucket (boundary split between leaves)
+    assert g0[407 // 64, 407 % 64] == np.asarray(tree["c"])[0]
+    back = bucketize.unflatten_buckets(layout, buckets)
+    for k in tree:
+        np.testing.assert_allclose(
+            np.asarray(back[k], np.float32), np.asarray(tree[k], np.float32), rtol=1e-2
+        )
+        assert back[k].dtype == tree[k].dtype
+
+
+def test_layout_empty_leaf():
+    tree = {"x": jnp.zeros((0,), jnp.float32), "y": jnp.ones((40,), jnp.float32)}
+    layout = bucketize.build_layout(tree, 32)
+    buckets = bucketize.flatten_buckets(layout, tree)
+    back = bucketize.unflatten_buckets(layout, buckets)
+    assert back["x"].shape == (0,)
+    np.testing.assert_array_equal(np.asarray(back["y"]), np.asarray(tree["y"]))
+
+
+def test_valid_mask_covers_padding_only():
+    layout = bucketize.build_layout(_tree(), 128)
+    mask = np.asarray(bucketize.valid_mask(layout, 0))
+    assert mask.sum() == layout.groups[0].valid
+    assert mask.reshape(-1)[: layout.groups[0].valid].all()
+
+
+# ---------------------------------------------------------------------------
+# per-bucket EF compression
+# ---------------------------------------------------------------------------
+
+
+def test_ef_encode_sign_matches_per_bucket_sign_encode():
+    layout = bucketize.build_layout(_tree(), 128)
+    rng = np.random.default_rng(0)
+    nb, bs = layout.groups[0].n_buckets, 128
+    b = jnp.asarray(rng.normal(size=(nb, bs)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(nb, bs)).astype(np.float32) * 0.1)
+    mask = bucketize.valid_mask(layout, 0)
+    comp = C.ScaledSignCompressor()
+    payload, new_err, dens = compressed.ef_encode_buckets(comp, b, e, mask=mask)
+    exp = jax.vmap(lambda x: C.sign_encode(x, scaled=True))(b + e)
+    np.testing.assert_array_equal(np.asarray(payload.data["words"]), np.asarray(exp.words))
+    np.testing.assert_allclose(np.asarray(payload.data["scale"]), np.asarray(exp.scale), rtol=1e-6)
+    delta = ref.bucket_sign_decode_ref(payload.data["words"], payload.data["scale"])
+    np.testing.assert_allclose(
+        np.asarray(new_err), np.asarray((b + e - delta) * mask), rtol=1e-5, atol=1e-6
+    )
+    assert np.all((np.asarray(dens) > 0) & (np.asarray(dens) <= 1))
+
+
+def test_ef_encode_generic_compressor_contract():
+    """Per-bucket EF with top-k: residual shrinks p by the δ=k/d contract."""
+    comp = C.TopKCompressor(k=16)
+    rng = np.random.default_rng(1)
+    p = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32))
+    payload, new_err, _ = compressed.ef_encode_buckets(comp, p, jnp.zeros_like(p))
+    dec = compressed.decode_buckets(comp, payload, 128)
+    np.testing.assert_allclose(np.asarray(new_err), np.asarray(p - dec), atol=1e-6)
+    for row_err, row_p in zip(np.asarray(new_err), np.asarray(p)):
+        assert (row_err**2).sum() <= (1 - 16 / 128 + 1e-6) * (row_p**2).sum()
+
+
+def test_bucket_kernels_interpret_match_ref():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=(3, 4096)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(3, 4096)).astype(np.float32) * 0.1)
+    w_ref, s_ref, e_ref = ops.ef_sign_bucket_step(g, e, force="ref")
+    s_pl = ef_sign.bucket_l1(g, e, interpret=True) / 4096.0
+    w_pl, e_pl = ef_sign.bucket_ef_sign_compress(g, e, s_pl, interpret=True)
+    np.testing.assert_array_equal(np.asarray(w_pl), np.asarray(w_ref))
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e_pl), np.asarray(e_ref), rtol=1e-5, atol=1e-5)
+    words = jnp.stack([w_ref, w_ref])
+    scales = jnp.stack([s_ref, 2 * s_ref])
+    np.testing.assert_allclose(
+        np.asarray(ef_sign.bucket_sign_decompress_mean(words, scales, interpret=True)),
+        np.asarray(ref.bucket_decompress_mean_ref(words, scales)),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-device collective path (W=1; multi-worker runs in test_distributed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["dense", "ef_allgather", "ef_alltoall", "majority_vote"])
+def test_bucketed_aggregator_single_device(strategy):
+    mesh = make_host_mesh(data=1, model=1)
+    tree = _tree()
+    layout = bucketize.build_layout(tree, 128)
+    comp = C.ScaledSignCompressor()
+    buckets = bucketize.flatten_buckets(layout, tree)
+    buckets_w = tuple(b[None] for b in buckets)
+    has_err = strategy.startswith("ef_")
+    err = tuple(jnp.zeros_like(b) for b in buckets_w) if has_err else ()
+    srv = (
+        tuple(s[None] for s in compressed.init_server_buckets(layout, 1))
+        if strategy == "ef_alltoall"
+        else ()
+    )
+    with use_mesh(mesh):
+        agg = collective.make_bucketed_aggregator(strategy, comp, layout, mesh, ("data",))
+        out, new_err, new_srv, info = jax.jit(agg)(buckets_w, err, srv, jax.random.PRNGKey(0))
+    b0, out0 = np.asarray(buckets[0]), np.asarray(out[0])
+    mask = np.asarray(bucketize.valid_mask(layout, 0))
+    if strategy == "dense":
+        np.testing.assert_allclose(out0, b0, rtol=1e-6)
+    elif strategy == "majority_vote":
+        np.testing.assert_array_equal(out0, np.where(b0 >= 0, 1.0, -1.0) * mask)
+    else:
+        scales = np.abs(b0).sum(-1) / 128.0
+        np.testing.assert_allclose(out0, scales[:, None] * np.where(b0 >= 0, 1.0, -1.0), rtol=1e-5)
+    # W=1: every strategy except dense moves zero bytes; dense uses the
+    # 2·4·d ring model regardless of world size
+    wire = float(info.wire_bytes_per_device)
+    if strategy == "dense":
+        assert wire == 2 * 4 * layout.padded_elements
+    else:
+        assert wire == 0.0
+    # exact agreement with the analytic bucketed wire models at any W
+    assert aggregation.bucketed_sign_allgather_wire_bytes(7, 128, 1) == 0.0
+    assert aggregation.bucketed_sign_alltoall_wire_bytes(7, 128, 4) == 2 * 3 * 2 * (128 / 8 + 4)
+
+
+def test_aggregator_state_roundtrip_init():
+    """init_agg_state(bucket_size=...) builds residuals matching the layout."""
+    tree = _tree()
+    layout = bucketize.build_layout(tree, 128)
+    st = aggregation.init_agg_state("ef_alltoall", tree, world=4, bucket_size=128)
+    assert len(st.worker_error) == len(layout.groups)
+    assert st.worker_error[0].shape == (layout.groups[0].n_buckets, 128)
+    nbw = compressed.server_shard_buckets(layout.groups[0].n_buckets, 4)
+    assert st.server_error[0].shape == (nbw, 128)
+    st2 = aggregation.init_agg_state("majority_vote", tree, bucket_size=128)
+    assert st2.worker_error == () and st2.server_error == ()

@@ -123,7 +123,6 @@ def test_theorem_1_sign_pattern():
     the iterates only ever move along one diagonal."""
     key = jax.random.PRNGKey(0)
     s = jnp.sign(jax.random.normal(key, (8,)))
-    xs = []
     for i in range(20):
         ai = s * jnp.abs(jax.random.normal(jax.random.PRNGKey(i), (8,)))  # sign(aᵢ)=s
         x = jax.random.normal(jax.random.PRNGKey(100 + i), (8,))

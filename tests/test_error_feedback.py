@@ -4,21 +4,17 @@ EF-vs-sign convergence behavior on the quadratic."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
-    EFState,
     ScaledSignCompressor,
     TopKCompressor,
     apply_updates,
-    ef_sgd,
     ef_step,
     error_norm_sq,
     get_optimizer,
     init_ef_state,
     lemma3_bound,
 )
-from repro.core.compressors import density
 
 
 def _quadratic_stream(key, d=64, sigma=1.0, steps=300, gamma=0.05):

@@ -2,14 +2,12 @@
 schedules, and the 1-device training loop."""
 
 import dataclasses
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core import optim
