@@ -12,7 +12,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-KNOWN_SUITES = ("kernels", "aggregation", "comm", "convergence", "serve", "roofline", "smoke")
+KNOWN_SUITES = (
+    "kernels", "aggregation", "comm", "overlap", "convergence", "serve", "roofline", "smoke",
+)
 
 
 class SkipBench(Exception):

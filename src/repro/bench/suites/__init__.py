@@ -6,6 +6,7 @@ from repro.bench.suites import (  # noqa: F401
     comm,
     convergence,
     kernels,
+    overlap,
     roofline,
     serve,
 )

@@ -1,0 +1,289 @@
+"""Overlap benches: schedule statics, ring wire/latency models, and the
+pipelined-step latency/exposure measurement at W=4.
+
+``python -m repro.bench run --suite overlap`` → BENCH_overlap.json. The
+deterministic subset (schedule facts + analytic ring models) also rides in
+``smoke``; the W=4 step measurement runs a 4-fake-device subprocess (the
+same isolation pattern as tests/test_distributed.py) so the main process
+keeps its single CPU device.
+
+Exposure accounting: on CPU the fake-device collectives execute inline, so
+the *measured* overlapped step can only tie the one-shot step — the wall
+numbers pin exactly that (ratio ≈ 1). What the schedule buys on a real
+interconnect is evaluated by feeding the measured per-stage components
+(backward+compress time, exchange-stage time, per-group byte split) through
+the pipeline latency model (:func:`repro.overlap.pipeline.exposure_report`):
+``overlap_exposed_comm_us`` is the part of the serial comm bill the schedule
+cannot hide, and must sit strictly below ``overlap_serial_comm_us``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from repro.bench.artifact import Metric
+from repro.bench.measure import bytes_metric, time_fn, wall_metric
+from repro.bench.registry import SkipBench, register_bench
+from repro.core import aggregation
+
+BUCKET_SIZE = 1 << 12  # 4096 elems — many buckets/groups on the reduced model
+WORLD = 4
+GROUPS = (2, 4)
+REF_WIRE_BYTES_PER_US = 1250.0  # 10 Gb/s inter-pod reference wire
+
+
+def _layout_and_schedule(arch: str, n_groups: int):
+    from repro.comm import bucketize
+    from repro.configs import get_config, reduced
+    from repro.models import transformer
+    from repro.overlap import build_schedule
+
+    cfg = reduced(get_config(arch))
+    shapes = jax.eval_shape(lambda k: transformer.init_params(cfg, k), jax.random.PRNGKey(0))
+    layout = bucketize.build_layout(shapes, BUCKET_SIZE)
+    return layout, build_schedule(layout, shapes, n_groups=n_groups)
+
+
+@register_bench("overlap_schedule_static", suites=("overlap", "smoke"))
+def overlap_schedule_static(ctx):
+    """Schedule build cost + the static facts the pipeline hangs off: group
+    count, byte balance, and the issue-order rank monotonicity."""
+    arch = "llama3_2_1b"
+    n_groups = 4
+    t = time_fn(
+        lambda: _layout_and_schedule(arch, n_groups),
+        iters=3 if ctx.fast else 10, warmup=1,
+    )
+    layout, sched = _layout_and_schedule(arch, n_groups)
+    cfg_d = {"arch": arch, "bucket_size": BUCKET_SIZE, "n_groups": n_groups}
+    sizes = [g.wire_bytes for g in sched.groups]
+    ranks = [g.rank for g in sched.groups]
+    metrics = [
+        wall_metric("overlap_schedule_build", t, config=cfg_d),
+        Metric(
+            name="overlap_schedule_n_groups", value=float(sched.n_groups),
+            metric="layout", unit="groups", config=cfg_d,
+            direction="match", tolerance=0.0,
+        ),
+        Metric(
+            name="overlap_schedule_covered_buckets", value=float(sched.n_buckets),
+            metric="layout", unit="buckets", config=cfg_d,
+            direction="match", tolerance=0.0,
+        ),
+        Metric(
+            # greedy balance quality: worst/best group byte ratio (1.0 = perfect)
+            name="overlap_schedule_byte_balance",
+            value=round(max(sizes) / min(sizes), 4),
+            metric="layout", unit="ratio", config=cfg_d,
+            direction="lower", tolerance=0.25,
+        ),
+        Metric(
+            # issue order must follow reverse-AD availability
+            name="overlap_schedule_rank_monotone",
+            value=float(all(a <= b for a, b in zip(ranks, ranks[1:]))),
+            metric="layout", unit="bool", config=cfg_d,
+            direction="match", tolerance=0.0,
+        ),
+    ]
+    return metrics
+
+
+@register_bench("overlap_ring_models", suites=("overlap", "smoke"))
+def overlap_ring_models(ctx):
+    """Analytic ring wire/latency models (core/aggregation.py): per-step
+    bytes × (W−1), cross-checked equal to the all-gather total — the
+    deterministic gate for the ef_ring strategy."""
+    layout, _ = _layout_and_schedule("llama3_2_1b", 4)
+    nb, bs = layout.n_buckets, layout.bucket_size
+    metrics = [
+        bytes_metric(
+            "overlap_model_ring_per_step_bytes",
+            aggregation.bucketed_sign_ring_per_step_bytes(nb, bs),
+            config={"n_buckets": nb, "bucket_size": bs},
+        )
+    ]
+    for world in (2, WORLD, 16):
+        ring = aggregation.bucketed_sign_ring_wire_bytes(nb, bs, world)
+        ag = aggregation.bucketed_sign_allgather_wire_bytes(nb, bs, world)
+        lat = aggregation.ring_latency_model(
+            nb, bs, world, bytes_per_us=REF_WIRE_BYTES_PER_US
+        )
+        cfg_d = {"world": world, "n_buckets": nb, "bucket_size": bs}
+        metrics.append(bytes_metric(f"overlap_model_ring_wire_w{world}", ring, config=cfg_d))
+        metrics.append(
+            Metric(
+                name=f"overlap_model_ring_eq_allgather_w{world}",
+                value=float(ring == ag),
+                metric="model", unit="bool", config=cfg_d,
+                direction="match", tolerance=0.0,
+            )
+        )
+        metrics.append(
+            Metric(
+                name=f"overlap_model_ring_step_us_w{world}",
+                value=round(lat["per_step_us"], 3),
+                metric="model", unit="us",
+                config=dict(cfg_d, bytes_per_us=REF_WIRE_BYTES_PER_US),
+                direction="match", tolerance=0.01,
+            )
+        )
+    return metrics
+
+
+_DRIVER = r"""
+import os, json, time, statistics
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(world)d"
+import sys
+sys.path.insert(0, %(src)r)
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduced
+from repro.core import optim
+from repro.core.compressors import ScaledSignCompressor
+from repro.launch.mesh import make_host_mesh, ef_axis_names, use_mesh
+from repro.sharding.rules import ShardingRules
+from repro.train.state import init_train_state
+from repro.train import steps as ST
+from repro.comm import collective
+from repro.overlap import build_schedule, make_overlapped_aggregator
+
+BUCKET, ITERS, WORLD = %(bucket)d, %(iters)d, %(world)d
+cfg = reduced(get_config("llama3_2_1b"))
+mesh = make_host_mesh(data=WORLD, model=1)
+rules = ShardingRules(cfg, mesh, "tp")
+ef_axes = ef_axis_names(mesh, "tp")
+chain = optim.sgd(0.02)
+comp = ScaledSignCompressor()
+key = jax.random.PRNGKey(0)
+batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+         "labels": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}
+
+def timeit(fn, *a):
+    for _ in range(2):
+        jax.block_until_ready(fn(*a))
+    xs = []
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        xs.append((time.perf_counter() - t0) * 1e6)
+    return {"median": statistics.median(xs), "min": min(xs)}
+
+out = {}
+with use_mesh(mesh):
+    state0 = init_train_state(cfg, key, chain, "ef_allgather", mesh, ef_axes, bucket_size=BUCKET)
+    def step_time(groups):
+        bundle = ST.make_train_step(cfg, mesh, rules, strategy="ef_allgather",
+            comp=comp, local_chain=chain, ef_axes=ef_axes, batch_example=batch,
+            state_example=state0, bucket_size=BUCKET, overlap_groups=groups)
+        state = jax.device_put(state0, bundle.in_shardings[0])
+        b = jax.device_put(batch, bundle.in_shardings[1])
+        # no donation: the timed loop reuses the same state buffers
+        fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings)
+        return timeit(lambda: fn(state, b))
+    out["oneshot"] = step_time(None)
+    for g in %(groups)r:
+        out["overlap_g%%d" %% g] = step_time(g)
+
+    # exchange stage alone (encode + collective + decode) = the serial comm
+    # bill the pipeline tries to hide
+    from repro.comm import bucketize
+    layout = bucketize.build_layout(state0.params, BUCKET)
+    agg = collective.make_bucketed_aggregator("ef_allgather", comp, layout, mesh, ef_axes)
+    rng = jax.random.PRNGKey(2)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    buckets_w = tuple(
+        jax.device_put(jax.random.normal(jax.random.fold_in(rng, gi), (WORLD, g.n_buckets, BUCKET)),
+                       NamedSharding(mesh, P("data")))
+        for gi, g in enumerate(layout.groups))
+    err_w = tuple(jnp.zeros_like(b) for b in buckets_w)
+    jagg = jax.jit(agg)
+    out["serial_comm"] = timeit(lambda: jagg(buckets_w, err_w, (), key))
+    ring = jax.jit(collective.make_bucketed_aggregator("ef_ring", comp, layout, mesh, ef_axes))
+    out["ring_comm"] = timeit(lambda: ring(buckets_w, err_w, (), key))
+    sched = build_schedule(layout, state0.params, n_groups=max(%(groups)r))
+    out["group_bytes"] = [g.wire_bytes for g in sched.groups]
+print(json.dumps(out))
+"""
+
+
+@register_bench("overlap_step_latency", suites=("overlap",))
+def overlap_step_latency(ctx):
+    """Overlapped vs one-shot EF step at W=4 (subprocess, 4 fake devices):
+    wall latency of both paths, the exchange stage alone, and the pipeline-
+    model exposure of the measured components."""
+    if jax.default_backend() != "cpu":
+        raise SkipBench("subprocess driver assumes CPU fake devices")
+    repo_src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    code = _DRIVER % {
+        "src": repo_src, "bucket": BUCKET_SIZE, "world": WORLD,
+        "iters": 5 if ctx.fast else 15, "groups": list(GROUPS),
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=1200,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"overlap driver failed: {proc.stderr[-2000:]}")
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    cfg_d = {"world": WORLD, "bucket_size": BUCKET_SIZE, "arch": "llama3_2_1b"}
+    metrics = [
+        wall_metric("overlap_oneshot_step", {**_t(out["oneshot"]), "iters": 0}, config=cfg_d),
+        wall_metric("overlap_serial_comm", {**_t(out["serial_comm"]), "iters": 0}, config=cfg_d),
+        wall_metric("overlap_ring_comm", {**_t(out["ring_comm"]), "iters": 0}, config=cfg_d),
+    ]
+    oneshot = out["oneshot"]["median"]
+    serial_comm = out["serial_comm"]["median"]
+    for g in GROUPS:
+        t = out[f"overlap_g{g}"]
+        metrics.append(
+            wall_metric(f"overlap_step_g{g}", {**_t(t), "iters": 0}, config=dict(cfg_d, groups=g))
+        )
+        metrics.append(
+            Metric(
+                # same work, pipelined order: must not cost more than one-shot
+                name=f"overlap_step_ratio_g{g}",
+                value=round(t["min"] / out["oneshot"]["min"], 4),
+                metric="ratio", unit="x", config=dict(cfg_d, groups=g),
+                direction="lower", tolerance=0.20, abs_tolerance=0.10,
+            )
+        )
+    # pipeline latency model on the measured components (backward+compress
+    # span + serial exchange bill, split over the schedule by wire bytes)
+    from repro.overlap import proportional_exposure
+
+    gb = out["group_bytes"]
+    rep = proportional_exposure(gb, max(oneshot - serial_comm, 0.0), serial_comm)
+    metrics.append(
+        Metric(
+            name="overlap_exposed_comm_us", value=round(rep["exposed_us"], 1),
+            metric="model", unit="us", config=dict(cfg_d, groups=len(gb)),
+            direction="lower", tolerance=1.0,
+        )
+    )
+    metrics.append(
+        Metric(
+            # the acceptance headline: exposure strictly below serial comm
+            name="overlap_exposure_frac", value=round(rep["exposure_frac"], 4),
+            metric="model", unit="fraction", config=dict(cfg_d, groups=len(gb)),
+            direction="lower", tolerance=0.5, abs_tolerance=0.1,
+        )
+    )
+    metrics.append(
+        Metric(
+            name="overlap_exposure_below_serial",
+            value=float(rep["exposed_us"] < rep["serial_comm_us"]),
+            metric="model", unit="bool", config=dict(cfg_d, groups=len(gb)),
+            direction="match", tolerance=0.0,
+        )
+    )
+    return metrics
+
+
+def _t(d: dict) -> dict:
+    return {"median_us": d["median"], "min_us": d["min"], "mean_us": d["median"]}

@@ -18,6 +18,11 @@ Strategies (mirroring ``repro.core.aggregation``):
 
 ``dense``          pmean of raw buckets — wire ≈ 2·4·d bytes (ring model).
 ``ef_allgather``   compress → all-gather payloads → decode-mean; worker EF.
+``ef_ring``        same payloads, exchanged as W−1 double-buffered
+                   ``ppermute`` hops with a fused decompress-accumulate per
+                   hop (:mod:`repro.overlap.ring`) — same total bytes as
+                   ef_allgather, but in per-hop units the overlap scheduler
+                   can slide under backward compute.
 ``ef_alltoall``    double compression: workers chunk the bucket stream,
                    all-to-all routes chunk *j* to worker *j* (the "server"
                    for those buckets), which decode-means, re-compresses with
@@ -44,7 +49,7 @@ from repro.utils import compat
 
 AxisNames = tuple[str, ...]
 
-_EF_STRATEGIES = ("ef_allgather", "ef_alltoall")
+_EF_STRATEGIES = ("ef_allgather", "ef_ring", "ef_alltoall")
 STRATEGIES = ("dense",) + _EF_STRATEGIES + ("majority_vote",)
 
 
@@ -91,6 +96,10 @@ def make_bucketed_aggregator(
     comp = comp or ScaledSignCompressor()
     if strategy == "ef_alltoall" and not compressed._is_sign(comp):
         raise ValueError("ef_alltoall supports sign compressors (wire format)")
+    if strategy == "ef_ring":
+        from repro.overlap import ring as ring_lib
+
+        ring_lib.ring_axis(ef_axes)  # single-axis EF world required
     w = world_size(mesh, ef_axes)
     bs = layout.bucket_size
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
@@ -131,6 +140,18 @@ def make_bucketed_aggregator(
                 outs.append(compressed.decode_mean_buckets(comp, gathered, bs))
                 new_errs.append(ne[None])
                 dens.append(jnp.mean(d_b))
+                wire_bits += (w - 1) * nb * bucket_bits
+
+            elif strategy == "ef_ring":
+                from repro.overlap import ring as ring_lib
+
+                payload, ne, d_b = compressed.ef_encode_buckets(
+                    comp, b, e, mask=masks[gi], key=gkey
+                )
+                outs.append(ring_lib.ring_decode_mean(comp, payload, bs, ef_axes, w))
+                new_errs.append(ne[None])
+                dens.append(jnp.mean(d_b))
+                # same total as all-gather, paid as (w−1) per-hop payloads
                 wire_bits += (w - 1) * nb * bucket_bits
 
             else:  # ef_alltoall — double compression over bucket shards

@@ -79,28 +79,34 @@ def ef_encode_buckets(
     *,
     mask: jax.Array | None = None,
     key: jax.Array | None = None,
+    keys: jax.Array | None = None,
 ) -> tuple[BucketPayload, jax.Array, jax.Array]:
     """Compress ``p = buckets + err`` per bucket.
 
     Returns ``(payload, new_err, per_bucket_density)``; ``new_err`` is masked
     so padding never accumulates residual. ``buckets``/``err`` are
     (n_buckets, bucket_size) fp32.
+
+    For the sign family everything — packed words, scales, residual AND the
+    density metric — comes out of the fused kernel's single stats pass; p is
+    never materialized here. ``keys`` (a precomputed (nb, 2) u32 stack of
+    per-bucket RNG keys) overrides the internal ``split(key, nb)``: the
+    overlap executor passes row subsets of the full split so a group-sliced
+    encode draws bit-identical randomness to the one-shot encode.
     """
     nb, bs = buckets.shape
-    p = buckets + err
-    # the density metric reads p once more than the fused kernel strictly
-    # needs; folding an L2 output into the kernel's L1 stats pass would
-    # reclaim that HBM pass on TPU (follow-up alongside async overlap)
-    dens = jax.vmap(density)(p)
     if _is_sign(comp):
         fixed = None if isinstance(comp, ScaledSignCompressor) else comp.scale
-        words, scales, new_err = ops.ef_sign_bucket_step(buckets, err, fixed_scale=fixed)
+        words, scales, new_err, dens = ops.ef_sign_bucket_step(buckets, err, fixed_scale=fixed)
         payload = BucketPayload(data={"words": words, "scale": scales})
     else:
-        if key is not None and not comp.deterministic:
-            keys = jax.random.split(key, nb)
-        else:
-            keys = jnp.zeros((nb, 2), jnp.uint32)
+        p = buckets + err
+        dens = jax.vmap(density)(p)
+        if keys is None:
+            if key is not None and not comp.deterministic:
+                keys = jax.random.split(key, nb)
+            else:
+                keys = jnp.zeros((nb, 2), jnp.uint32)
 
         def one(pb, kb):
             pay = comp.compress(pb, key=kb if not comp.deterministic else None)

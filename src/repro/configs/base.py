@@ -13,6 +13,37 @@ import importlib
 
 from repro.models.config import ModelConfig
 
+# default pipeline depth for --overlap: 4 groups keeps every stage's
+# collective ≥ the per-group compress time on the bench model while the
+# first group still issues well before the backward scan finishes
+DEFAULT_OVERLAP_GROUPS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapConfig:
+    """Async-overlap knobs carried from the launcher into the train step.
+
+    ``n_groups`` is the pipeline depth (bucket groups per step); the EF
+    residual layout is schedule-independent, so this can change across
+    restarts without invalidating checkpoints.
+    """
+
+    n_groups: int = DEFAULT_OVERLAP_GROUPS
+
+    def __post_init__(self):
+        if self.n_groups < 1:
+            raise ValueError(f"overlap n_groups must be >= 1, got {self.n_groups}")
+
+    @staticmethod
+    def from_args(overlap: bool, overlap_groups: int | None) -> "OverlapConfig | None":
+        """CLI plumbing: ``--overlap`` switches it on, ``--overlap-groups``
+        overrides the depth (and implies ``--overlap``)."""
+        if not overlap and overlap_groups is None:
+            return None
+        if overlap_groups is None:
+            return OverlapConfig()
+        return OverlapConfig(n_groups=overlap_groups)  # 0/negative: __post_init__ rejects
+
 ARCH_IDS = [
     "granite_moe_1b_a400m",
     "llama3_2_1b",

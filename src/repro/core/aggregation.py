@@ -114,6 +114,39 @@ def bucketed_sign_alltoall_wire_bytes(n_buckets: int, bucket_size: int, world: i
     return 2.0 * (world - 1) * shard * (bucket_size / 8.0 + 4.0)
 
 
+def bucketed_sign_ring_per_step_bytes(n_buckets: int, bucket_size: int) -> float:
+    """One ring hop: every device receives one full sign payload per bucket
+    (bucket_size bits + one fp32 scale) from its neighbor."""
+    return n_buckets * (bucket_size / 8.0 + 4.0)
+
+
+def bucketed_sign_ring_wire_bytes(n_buckets: int, bucket_size: int, world: int) -> float:
+    """Ring exchange total: per-step bytes × (W−1) serial hops — the same
+    bill as ef_allgather, paid in (W−1) independently schedulable units."""
+    return (world - 1) * bucketed_sign_ring_per_step_bytes(n_buckets, bucket_size)
+
+
+def ring_latency_model(
+    n_buckets: int, bucket_size: int, world: int, *, bytes_per_us: float
+) -> dict:
+    """Analytic latency of the ring exchange on a ``bytes_per_us`` wire.
+
+    Returns ``{"steps", "per_step_bytes", "per_step_us", "total_us"}`` — the
+    per-step term is what the overlap scheduler hides behind backward
+    compute; the bench overlap suite gates these against its baseline just
+    like the wire-byte models of the existing strategies.
+    """
+    steps = max(0, world - 1)
+    per_step = bucketed_sign_ring_per_step_bytes(n_buckets, bucket_size)
+    per_step_us = per_step / bytes_per_us
+    return {
+        "steps": steps,
+        "per_step_bytes": per_step,
+        "per_step_us": per_step_us,
+        "total_us": steps * per_step_us,
+    }
+
+
 class AggState(NamedTuple):
     worker_error: Any  # per-worker EF residual (pytree like params) or ()
     server_error: Any  # sharded server-side residual for double compression or ()
@@ -162,7 +195,7 @@ def init_agg_state(
         layout = bucketize.build_layout(params, bucket_size)
         worker_error = (
             compressed.init_error_buckets(layout)
-            if strategy in ("ef_allgather", "ef_alltoall")
+            if strategy in ("ef_allgather", "ef_ring", "ef_alltoall")
             else ()
         )
         server_error = (
@@ -180,6 +213,11 @@ def init_agg_state(
     zeros = lambda x: jnp.zeros(x.shape, error_dtype)
     worker_error: Any = ()
     server_error: Any = ()
+    if strategy == "ef_ring":
+        raise ValueError(
+            "ef_ring is bucketed-only (repro.overlap.ring): the per-leaf "
+            "fallback has no ring implementation — set a bucket_size"
+        )
     if strategy in ("ef_allgather", "ef_alltoall"):
         worker_error = jax.tree.map(zeros, params)
     if strategy == "ef_alltoall":

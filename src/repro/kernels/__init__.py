@@ -1,7 +1,9 @@
 """Pallas TPU kernels (interpret-validated on CPU; TPU is the target):
 
 * ef_sign      — fused EF-sign compression: γg+e → packed words + residual,
-                 plus decompress-and-mean over gathered payloads
+                 decompress-and-mean over gathered payloads, the whole-bucket
+                 variants (single stats pass feeding scale AND density), and
+                 the fused decompress-accumulate hop of the overlap ring
 * flash_attention — forward flash attention (online softmax, VMEM-tiled)
 
 ``ops.py`` holds the jit'd public wrappers with backend dispatch; ``ref.py``

@@ -142,6 +142,39 @@ def bucket_l1(g, e, *, interpret: bool = False):
     )(g, e)
 
 
+def _bucket_stats_kernel(g_ref, e_ref, l1_ref, l2_ref):
+    p = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    l1_ref[...] = jnp.sum(jnp.abs(p), axis=-1)
+    l2_ref[...] = jnp.sum(p * p, axis=-1)
+
+
+def bucket_stats(g, e, *, interpret: bool = False):
+    """Per-bucket (L1, L2²) of p = g + e in one fused pass: (nb, bs) → 2×(nb,).
+
+    Supersedes :func:`bucket_l1` on the comm path: the same HBM read of
+    (g, e) also feeds the density metric, so the metric no longer costs a
+    second pass over the bucket stack.
+    """
+    nb, bs = g.shape
+    return pl.pallas_call(
+        _bucket_stats_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, e)
+
+
 def _bucket_ef_sign_kernel(scale_ref, g_ref, e_ref, words_ref, e_new_ref):
     scale = scale_ref[0]
     p = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
@@ -175,6 +208,40 @@ def bucket_ef_sign_compress(g, e, scales, *, interpret: bool = False):
         ],
         interpret=interpret,
     )(scales, g, e)
+
+
+def _bucket_accumulate_kernel(scales_ref, acc_ref, words_ref, out_ref):
+    # acc block (1, bs); words block (1, bs/32); scale (1,) — one VMEM-resident
+    # decode fused with the add, no ±scale tensor ever hits HBM
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    wd = words_ref[...]  # (1, bs/32)
+    bits = (wd[..., None] >> shifts) & jnp.uint32(1)
+    signs = 2.0 * bits.reshape(out_ref.shape).astype(jnp.float32) - 1.0
+    out_ref[...] = acc_ref[...] + scales_ref[0] * signs
+
+
+def bucket_sign_accumulate(acc, words, scales, *, interpret: bool = False):
+    """Fused decompress-accumulate: acc + scaleᵦ·unpack(wordsᵦ) per bucket.
+
+    acc (nb, bs) f32, words (nb, bs/32) u32, scales (nb,) f32 → (nb, bs) f32.
+    The per-hop accumulation of the double-buffered ring aggregator: each
+    arriving payload folds into the fp32 accumulator in a single
+    HBM→VMEM→HBM pass (read acc + words, write acc'), so the ring's decode
+    cost is spread across the W−1 hops instead of piling up after the last.
+    """
+    nb, bs = acc.shape
+    return pl.pallas_call(
+        _bucket_accumulate_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+            pl.BlockSpec((1, bs // 32), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bs), jnp.float32),
+        interpret=interpret,
+    )(scales, acc, words)
 
 
 def _bucket_decompress_mean_kernel(scales_ref, words_ref, out_ref, *, w: int):

@@ -104,27 +104,34 @@ def ef_sign_bucket_step(
     """Fused EF sign compression of a whole bucket stack (repro.comm path).
 
     ``g``/``e`` are (n_buckets, bucket_size) f32 (update and EF residual);
-    returns ``(words (nb, bs/32) u32, scales (nb,) f32, e_new (nb, bs) f32)``.
+    returns ``(words (nb, bs/32) u32, scales (nb,) f32, e_new (nb, bs) f32,
+    dens (nb,) f32)``. The stats pass emits per-bucket (L1, L2²) from ONE read
+    of (g, e), so the scale AND the density metric φ = ‖p‖₁²/(bs·‖p‖₂²) come
+    for free — no second pass over p as the old ``vmap(density)`` cost.
     Scaled sign uses the per-bucket L1 mean ‖p_b‖₁/bs (the padded tail of the
     last bucket is zero, deflating its scale slightly — EF absorbs the
     difference and the unflatten slice discards the tail); ``fixed_scale``
-    selects the unscaled-sign wire format instead.
+    selects the unscaled-sign wire format instead (scale is fixed but the
+    stats pass still supplies the density).
     """
     nb, bs = g.shape
     if bs % 32 != 0:
         raise ValueError(f"bucket_size must be a multiple of 32, got {bs}")
     use_pallas, interpret = _bucket_use_pallas(force, bs)
+    if use_pallas:
+        l1, l2sq = ef_sign.bucket_stats(g, e, interpret=interpret)
+    else:
+        l1, l2sq = ref.bucket_stats_ref(g, e)
+    dens = jnp.where(l2sq > 0, l1 * l1 / (float(bs) * l2sq), jnp.float32(1.0))
     if fixed_scale is not None:
         scales = jnp.full((nb,), fixed_scale, jnp.float32)
-    elif use_pallas:
-        scales = ef_sign.bucket_l1(g, e, interpret=interpret) / float(bs)
     else:
-        scales = ref.bucket_l1_ref(g, e) / float(bs)
+        scales = l1 / float(bs)
     if use_pallas:
         words, e_new = ef_sign.bucket_ef_sign_compress(g, e, scales, interpret=interpret)
     else:
         words, e_new = ref.bucket_ef_sign_compress_ref(g, e, scales)
-    return words, scales, e_new
+    return words, scales, e_new, dens
 
 
 @functools.partial(jax.jit, static_argnames=("force",))
@@ -134,6 +141,20 @@ def bucket_decompress_mean(words: jax.Array, scales: jax.Array, *, force: str | 
     if use_pallas:
         return ef_sign.bucket_sign_decompress_mean(words, scales, interpret=interpret)
     return ref.bucket_decompress_mean_ref(words, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def bucket_sign_accumulate(
+    acc: jax.Array, words: jax.Array, scales: jax.Array, *, force: str | None = None
+):
+    """Fused decompress-accumulate (ring hop): acc + scaleᵦ·unpack(wordsᵦ).
+
+    (nb, bs) f32 + (nb, bs/32) u32 + (nb,) f32 → (nb, bs) f32.
+    """
+    use_pallas, interpret = _bucket_use_pallas(force, words.shape[-1] * 32)
+    if use_pallas:
+        return ef_sign.bucket_sign_accumulate(acc, words, scales, interpret=interpret)
+    return ref.bucket_sign_accumulate_ref(acc, words, scales)
 
 
 def bucket_sign_decode(words: jax.Array, scales: jax.Array, bucket_size: int) -> jax.Array:

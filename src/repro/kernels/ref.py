@@ -65,6 +65,28 @@ def bucket_l1_ref(g: jax.Array, e: jax.Array) -> jax.Array:
     return jnp.sum(jnp.abs(p), axis=-1)
 
 
+def bucket_stats_ref(g: jax.Array, e: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-bucket (‖p‖₁, ‖p‖₂²) of p = g + e in ONE pass.  (nb, bs) → 2×(nb,).
+
+    The L1 drives the scaled-sign scale and the pair drives the density
+    φ = ‖p‖₁²/(d·‖p‖₂²) — emitting both from the same read of (g, e) is what
+    removes the extra HBM pass the old ``vmap(density)(p)`` metric cost.
+    """
+    p = g.astype(jnp.float32) + e.astype(jnp.float32)
+    return jnp.sum(jnp.abs(p), axis=-1), jnp.sum(p * p, axis=-1)
+
+
+def bucket_sign_accumulate_ref(acc: jax.Array, words: jax.Array, scales: jax.Array) -> jax.Array:
+    """Fused decompress-accumulate: acc + scaleᵦ·unpack(words).
+
+    acc: (nb, bs) f32; words: (nb, bs/32) u32; scales: (nb,) f32. This is the
+    per-hop accumulation of the ring aggregator — the payload is decoded
+    straight into the accumulator (one read of acc + one read of words per
+    element) instead of materializing the ±scale tensor and adding it.
+    """
+    return acc + bucket_sign_decode_ref(words, scales)
+
+
 def bucket_ef_sign_compress_ref(
     g: jax.Array, e: jax.Array, scales: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

@@ -7,7 +7,8 @@
 On this CPU container use ``--reduced`` (the smoke variant); on a real
 cluster drop it and point ``--mesh-data/--mesh-model`` at the slice. The
 ``--strategy`` flag selects the gradient exchange (dense | ef_allgather |
-ef_alltoall | majority_vote).
+ef_ring | ef_alltoall | majority_vote); ``--overlap`` pipelines the
+compressed exchange with backward compute (see README "Async overlap").
 """
 
 from __future__ import annotations
@@ -16,6 +17,7 @@ import argparse
 import json
 
 from repro.configs import get_config, reduced as make_reduced
+from repro.configs.base import OverlapConfig
 from repro.launch.mesh import make_host_mesh
 from repro.train.loop import TrainJob, run_training
 
@@ -43,6 +45,16 @@ def main():
         "--bucket-size", type=int, default=None,
         help="comm-bucket elements (default: repro.comm's 65536; 0 = per-leaf path)",
     )
+    ap.add_argument(
+        "--overlap", action="store_true",
+        help="pipeline bucket compression + collectives with backward compute "
+        "(repro.overlap; bucketed ef_allgather / ef_ring / majority_vote only "
+        "— ef_alltoall's server shards aren't availability-sliceable)",
+    )
+    ap.add_argument(
+        "--overlap-groups", type=int, default=None,
+        help="overlap pipeline depth (bucket groups per step; implies --overlap)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,6 +71,7 @@ def main():
         optimizer=args.optimizer, strategy=args.strategy,
         compressor=args.compressor, policy=args.policy, seed=args.seed,
         microbatches=args.microbatches,
+        overlap=OverlapConfig.from_args(args.overlap, args.overlap_groups),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, **kw,
     )
     _, history = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))

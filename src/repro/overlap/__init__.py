@@ -1,0 +1,55 @@
+"""Async overlap scheduler: pipeline bucket compression + collectives with
+backward compute.
+
+The bucketed comm layer (PR 2) made every bucket an independent stream; this
+package cashes that in. One aggregator call after the full backward pays the
+entire wire latency serially — instead we derive a static
+:class:`~repro.overlap.schedule.OverlapSchedule` from the
+:class:`~repro.comm.bucketize.BucketLayout` plus the model's reverse-AD
+structure, and execute the exchange as a pipeline of bucket *groups*: the
+collective for group *k* (whose gradients become available first in the
+backward pass) is issued while group *k+1* is still being compressed — and,
+with the staged grad-fn in :mod:`repro.train.steps`, while the earlier
+layers' backward is still running.
+
+``schedule``
+    Static grouping of buckets by reverse-AD availability rank, greedy-
+    balanced by wire bytes; pure function of (layout, param structure).
+``ring``
+    Double-buffered ``ppermute`` ring exchange: payloads stay
+    sign-compressed on the wire for all W−1 hops and fold into the fp32
+    accumulator through the fused decompress-accumulate Pallas kernel —
+    the per-hop alternative to the one-shot ``all_gather``
+    (``strategy="ef_ring"``).
+``pipeline``
+    The executor: an overlapped drop-in for
+    :func:`repro.comm.collective.make_bucketed_aggregator` plus the
+    pipeline latency model that turns measured per-group component times
+    into the exposed-communication metric the bench suite gates.
+"""
+
+from repro.overlap.pipeline import (
+    exposure_report,
+    make_overlapped_aggregator,
+    proportional_exposure,
+)
+from repro.overlap.ring import ring_decode_mean
+from repro.overlap.schedule import (
+    GroupSlice,
+    OverlapGroup,
+    OverlapSchedule,
+    build_schedule,
+    reverse_ad_ranks,
+)
+
+__all__ = [
+    "GroupSlice",
+    "OverlapGroup",
+    "OverlapSchedule",
+    "build_schedule",
+    "exposure_report",
+    "make_overlapped_aggregator",
+    "proportional_exposure",
+    "reverse_ad_ranks",
+    "ring_decode_mean",
+]

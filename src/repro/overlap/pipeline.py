@@ -1,0 +1,235 @@
+"""The overlap executor: per-group compress → collective pipelining.
+
+``make_overlapped_aggregator`` is a drop-in for
+:func:`repro.comm.collective.make_bucketed_aggregator` that executes the
+exchange per :class:`~repro.overlap.schedule.OverlapSchedule` group instead
+of in one shot. Inside the (fully-manual) ``shard_map`` body the groups are
+laid out in reverse-AD availability order as independent dataflow chains:
+
+    encode(g0) → collective(g0) ─┐
+    encode(g1) → collective(g1) ─┤→ decode + scatter
+    encode(g2) → collective(g2) ─┘
+
+Nothing in group k+1's encode depends on group k's collective, so the XLA
+latency-hiding scheduler is free to run collective *k* while *k+1* is still
+compressing (and, with the staged grad-fn of :mod:`repro.train.steps`
+feeding the step, while earlier layers' backward still runs). On CPU the
+fake-device collectives execute inline — the pipeline's wall-clock win there
+is ~nil by construction, which is why the bench suite additionally evaluates
+the measured per-group component times through :func:`exposure_report`
+(the standard pipeline latency model) to report how much communication the
+schedule leaves exposed.
+
+Numerics are IDENTICAL to the one-shot path: buckets are compressed by the
+same per-bucket kernels on row slices, stochastic compressors draw the same
+per-bucket keys (the full ``split`` is computed once and sliced), and wire /
+density accounting reduces in the same order — the 5-step trajectory test in
+tests/test_overlap.py pins bitwise equality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import bucketize, compressed
+from repro.comm.collective import _gather_payload, _worker_index, world_size
+from repro.core.aggregation import AggInfo
+from repro.core.compressors import Compressor, ScaledSignCompressor
+from repro.overlap import ring as ring_lib
+from repro.overlap.schedule import OverlapSchedule
+from repro.utils import compat
+
+AxisNames = tuple[str, ...]
+
+# strategies the pipeline can slice per group. ef_alltoall's server-sharded
+# bucket streams are partitioned across workers, not availability ranks, so
+# it stays on the one-shot path; dense has no compression stage to pipeline
+# (train/steps.py routes it to its own GSPMD path before this is reached).
+OVERLAP_STRATEGIES = ("ef_allgather", "ef_ring", "majority_vote")
+
+
+def make_overlapped_aggregator(
+    strategy: str,
+    comp: Compressor | None,
+    layout: bucketize.BucketLayout,
+    schedule: OverlapSchedule,
+    mesh,
+    ef_axes: AxisNames,
+):
+    """Schedule-driven aggregator with the same signature/contract as
+    ``make_bucketed_aggregator``: ``fn(buckets_w, err_w, srv_w, key) ->
+    (agg, new_err_w, new_srv_w, info)``."""
+    if strategy not in OVERLAP_STRATEGIES:
+        raise ValueError(
+            f"overlap supports {OVERLAP_STRATEGIES}, got {strategy!r} "
+            "(ef_alltoall's server shards aren't availability-sliceable)"
+        )
+    if schedule.layout is not layout and schedule.layout != layout:
+        raise ValueError("schedule was built for a different BucketLayout")
+    comp = comp or ScaledSignCompressor()
+    w = world_size(mesh, ef_axes)
+    bs = layout.bucket_size
+    ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
+    masks = tuple(bucketize.valid_mask(layout, gi) for gi in range(len(layout.groups)))
+    bucket_bits = comp.wire_bits(bs)
+    has_err = strategy in ("ef_allgather", "ef_ring")
+    n_dtype = len(layout.groups)
+
+    def body(buckets, err, srv, key):
+        del srv
+        widx = _worker_index(ef_axes)
+        keys_full = [None] * n_dtype
+        if not comp.deterministic:
+            for gi in range(n_dtype):
+                gkey = jax.random.fold_in(jax.random.fold_in(key, widx), gi)
+                keys_full[gi] = jax.random.split(gkey, buckets[gi][0].shape[0])
+
+        # ---- phase 1: per group, encode slices then issue the collective.
+        # Each iteration is an independent dataflow chain — collective k and
+        # encode k+1 have no data dependency, which is the pipeline.
+        staged = []  # [(slice, encoded/new_err/dens, collective result)]
+        wire_bits = 0.0
+        for grp in schedule.groups:
+            for sl in grp.slices:
+                b = buckets[sl.group][0][sl.start : sl.stop]
+                m = masks[sl.group][sl.start : sl.stop]
+                nb = sl.n_buckets
+                if strategy == "majority_vote":
+                    s = jnp.where(b >= 0, 1.0, -1.0)
+                    tot = lax.psum(s, ef_axes)
+                    staged.append((sl, None, None, jnp.where(tot >= 0, 1.0, -1.0) * m))
+                    wire_bits += (w - 1) * nb * bs
+                else:
+                    e = err[sl.group][0][sl.start : sl.stop]
+                    ks = keys_full[sl.group]
+                    payload, ne, d_b = compressed.ef_encode_buckets(
+                        comp, b, e, mask=m,
+                        keys=None if ks is None else ks[sl.start : sl.stop],
+                    )
+                    if strategy == "ef_ring":
+                        out = ring_lib.ring_decode_mean(comp, payload, bs, ef_axes, w)
+                        staged.append((sl, ne, d_b, out))
+                    else:
+                        gathered = _gather_payload(payload, ef_axes)
+                        staged.append((sl, ne, d_b, gathered))
+                    wire_bits += (w - 1) * nb * bucket_bits
+
+        # ---- phase 2: decode gathered payloads, scatter into full stacks
+        outs = [jnp.zeros((g.n_buckets, bs), jnp.float32) for g in layout.groups]
+        new_errs = [jnp.zeros((g.n_buckets, bs), jnp.float32) for g in layout.groups]
+        dens_full = [jnp.ones((g.n_buckets,), jnp.float32) for g in layout.groups]
+        for sl, ne, d_b, result in staged:
+            if strategy == "ef_allgather":
+                result = compressed.decode_mean_buckets(comp, result, bs)
+            outs[sl.group] = outs[sl.group].at[sl.start : sl.stop].set(result)
+            if ne is not None:
+                new_errs[sl.group] = new_errs[sl.group].at[sl.start : sl.stop].set(ne)
+                dens_full[sl.group] = dens_full[sl.group].at[sl.start : sl.stop].set(d_b)
+
+        # identical reduction order to the one-shot body: per dtype group
+        # mean, then mean over groups, then pmean
+        dens = [jnp.mean(d) if has_err else jnp.float32(1.0) for d in dens_full]
+        info = AggInfo(
+            wire_bytes_per_device=jnp.float32(wire_bits / 8.0),
+            mean_density=lax.pmean(jnp.mean(jnp.stack(dens)), ef_axes),
+        )
+        return (
+            tuple(outs),
+            tuple(e[None] for e in new_errs) if has_err else (),
+            (),
+            info,
+        )
+
+    stacked = tuple(P(ef) for _ in range(n_dtype))
+    in_specs = (stacked, stacked if has_err else (), (), P())
+    out_specs = (
+        tuple(P() for _ in range(n_dtype)),
+        stacked if has_err else (),
+        (),
+        AggInfo(wire_bytes_per_device=P(), mean_density=P()),
+    )
+    return compat.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, manual_axes=None
+    )
+
+
+# ---------------------------------------------------------------------------
+# pipeline latency model (exposure accounting)
+# ---------------------------------------------------------------------------
+
+
+def exposure_report(
+    avail_us: tuple[float, ...] | list[float],
+    comm_us: tuple[float, ...] | list[float],
+    *,
+    tail_us: float = 0.0,
+) -> dict:
+    """Evaluate the pipeline schedule on measured per-group component times.
+
+    ``avail_us[k]`` — wall time (from step start) at which group *k*'s
+    compressed payload is ready to ship (backward + compress progress);
+    must be non-decreasing in the schedule's issue order. ``comm_us[k]`` —
+    the group's collective time on a serial wire. ``tail_us`` — compute that
+    still runs after the last payload is ready (decode/apply of early
+    groups can hide trailing comm too).
+
+    Standard single-wire pipeline recurrence: collective *k* starts when its
+    payload is ready AND the wire is free::
+
+        finish_k = max(finish_{k-1}, avail_k) + comm_k
+
+    ``exposed_us`` is how much of the comm bill the step actually waits on —
+    ``finish_{n-1} − (avail_{n-1} + tail_us)``, clamped at 0 — vs
+    ``serial_comm_us = Σ comm_k``, the bill the one-shot path pays in full.
+    One group degenerates to exposure = its full comm time.
+    """
+    if len(avail_us) != len(comm_us) or not comm_us:
+        raise ValueError("need one availability time per comm time (>= 1 group)")
+    if any(b < a for a, b in zip(avail_us, avail_us[1:])):
+        raise ValueError(f"avail_us must be non-decreasing, got {avail_us!r}")
+    finish = 0.0
+    for a, c in zip(avail_us, comm_us):
+        finish = max(finish, a) + c
+    compute_end = avail_us[-1] + tail_us
+    serial = float(sum(comm_us))
+    exposed = max(0.0, finish - compute_end)
+    return {
+        "serial_comm_us": serial,
+        "exposed_us": exposed,
+        "exposure_frac": exposed / serial if serial else 0.0,
+        "finish_us": finish,
+        "compute_us": compute_end,
+        "hidden_us": serial - exposed,
+    }
+
+
+def proportional_exposure(
+    group_bytes: list[float] | tuple[float, ...],
+    compute_us: float,
+    serial_comm_us: float,
+    *,
+    tail_us: float = 0.0,
+) -> dict:
+    """:func:`exposure_report` under the proportional-split assumption.
+
+    When only aggregate times are known — a backward+compress span of
+    ``compute_us`` and a serial exchange bill of ``serial_comm_us`` — the
+    standard simplification spreads both over the schedule by wire bytes:
+    group *k*'s payload is ready at ``compute_us · cum_bytes_k/total`` and
+    its hop costs ``serial_comm_us · bytes_k/total``. Both the overlap bench
+    suite (measured step/exchange walls) and the ``--overlap`` example
+    (analytic wire @ reference bandwidth) feed this one helper so the model
+    they report is the same by construction.
+    """
+    total = float(sum(group_bytes))
+    if total <= 0:
+        raise ValueError(f"group_bytes must sum positive, got {group_bytes!r}")
+    avail, comm, cum = [], [], 0.0
+    for b in group_bytes:
+        cum += b
+        avail.append(compute_us * cum / total)
+        comm.append(serial_comm_us * b / total)
+    return exposure_report(avail, comm, tail_us=tail_us)

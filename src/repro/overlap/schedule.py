@@ -1,0 +1,198 @@
+"""Static overlap schedule: group buckets by reverse-AD availability.
+
+The schedule is computed ONCE per (BucketLayout, param structure) — like the
+layout itself it needs shapes only, no device data — and is a pure function
+of its inputs, so identical inputs always produce identical groups (the
+scheduler-determinism contract tests/test_overlap.py pins).
+
+Two ingredients:
+
+* **Availability ranks.** Each param leaf gets an integer rank ordering when
+  its gradient becomes available during reverse-mode AD: the LM head and
+  final norm backward first (rank 0), the block stack next (the ``lax.scan``
+  over layers makes the whole stack one atomic rank — per-layer grads are
+  not splittable through a scan, which is exactly the fallback case the
+  pipeline executor handles), the encoder after it, and the embedding table
+  last (its backward is the final op of the pass, and under weight tying it
+  also accumulates the head's contribution). Trees that don't look like our
+  transformer fall back to reversed flatten order — leaves used later in the
+  forward produce gradients earlier in the backward.
+
+* **Greedy byte balancing.** Buckets are ordered by (rank, group, index) and
+  the ordered stream is cut into ``n_groups`` contiguous segments of
+  near-equal wire bytes. Contiguity in availability order is what makes the
+  pipeline legal (group k is fully available before group k+1's issue
+  point); byte balance is what keeps every pipeline stage's collective the
+  same length. A bucket that straddles a stage boundary takes the max rank
+  of its leaves — it is only ready when its *last* gradient is.
+
+Ranks order bucket *issue*, nothing else: the EF residual layout, the wire
+format and the aggregated result are all schedule-independent, so
+``--overlap-groups`` can change between runs (or mid-training via restart)
+without touching checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.comm.bucketize import BucketLayout
+from repro.core.compressors import Compressor, ScaledSignCompressor
+
+# decoder params whose grads arrive first/last in reverse-AD order; keys are
+# matched against the flattened tree path of each leaf
+_STAGE_RANKS = (
+    ("encoder", 2),  # runs before the decoder stack → backward after it
+    ("final_norm", 0),
+    ("head", 0),
+    ("embed", 3),  # embedding backward is the last op of the pass
+    ("blocks", 1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSlice:
+    """A contiguous run of buckets inside one dtype group's stream."""
+
+    group: int  # index into BucketLayout.groups
+    start: int  # first bucket row
+    stop: int  # one past the last bucket row
+
+    @property
+    def n_buckets(self) -> int:
+        return self.stop - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapGroup:
+    """One pipeline stage: the buckets whose collective is issued together."""
+
+    slices: tuple[GroupSlice, ...]
+    rank: int  # max availability rank of any bucket in the group
+    wire_bytes: int  # payload bytes this group ships to ONE peer
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(s.n_buckets for s in self.slices)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapSchedule:
+    """Issue-ordered bucket groups for the pipelined exchange."""
+
+    layout: BucketLayout
+    groups: tuple[OverlapGroup, ...]  # reverse-AD availability order
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(g.n_buckets for g in self.groups)
+
+
+def _path_rank(path) -> int | None:
+    names = [getattr(k, "key", getattr(k, "name", getattr(k, "idx", None))) for k in path]
+    names = [str(n) for n in names if n is not None]
+    for needle, rank in _STAGE_RANKS:
+        if any(needle == n for n in names):
+            return rank
+    return None
+
+
+def reverse_ad_ranks(tree) -> tuple[int, ...]:
+    """Per-leaf availability rank, tree-flatten order (lower = earlier grad).
+
+    Transformer-shaped trees rank by stage (head/final_norm < blocks <
+    encoder < embed); anything else falls back to reversed flatten order.
+    """
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    ranks = [_path_rank(path) for path, _ in paths_leaves]
+    if any(r is None for r in ranks):
+        n = len(ranks)
+        return tuple(n - 1 - i for i in range(n))
+    return tuple(ranks)
+
+
+def _bucket_ranks(layout: BucketLayout, leaf_ranks: tuple[int, ...]) -> list[list[int]]:
+    """Per (dtype-group, bucket) availability rank = max rank of its leaves."""
+    bs = layout.bucket_size
+    per_group = [[-1] * g.n_buckets for g in layout.groups]
+    for slot, rank in zip(layout.slots, leaf_ranks):
+        if slot.size == 0:
+            continue
+        first = slot.offset // bs
+        last = (slot.offset + slot.size - 1) // bs
+        row = per_group[slot.group]
+        for b in range(first, last + 1):
+            row[b] = max(row[b], rank)
+    for gi, row in enumerate(per_group):
+        for b, r in enumerate(row):
+            if r < 0:  # padding-only trailing bucket: ride with the last real one
+                row[b] = row[b - 1] if b else 0
+    return per_group
+
+
+def build_schedule(
+    layout: BucketLayout,
+    params,
+    *,
+    n_groups: int = 4,
+    comp: Compressor | None = None,
+) -> OverlapSchedule:
+    """Derive the static pipeline schedule for ``layout`` over ``params``.
+
+    ``params`` may be arrays or ``jax.eval_shape`` structs — only the tree
+    structure is read. ``comp`` sets the per-bucket wire cost used for the
+    greedy balance (every bucket of one layout costs the same for a fixed
+    compressor, so balance-by-bytes degenerates to balance-by-count — the
+    bytes form is kept because mixed-precision transports won't have that
+    symmetry).
+    """
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    comp = comp or ScaledSignCompressor()
+    leaf_ranks = reverse_ad_ranks(params)
+    if len(leaf_ranks) != len(layout.slots):
+        raise ValueError(
+            f"params tree has {len(leaf_ranks)} leaves, layout expects {len(layout.slots)}"
+        )
+    ranks = _bucket_ranks(layout, leaf_ranks)
+    ordered = sorted(
+        ((ranks[gi][bi], gi, bi) for gi, g in enumerate(layout.groups) for bi in range(g.n_buckets))
+    )
+    bucket_bytes = comp.wire_bits(layout.bucket_size) / 8.0
+    n_groups = min(n_groups, len(ordered))
+    total = bucket_bytes * len(ordered)
+
+    groups: list[OverlapGroup] = []
+    cut, acc = [], 0.0
+    for rank, gi, bi in ordered:
+        cut.append((rank, gi, bi))
+        acc += bucket_bytes
+        # close the segment once it crosses its proportional share of the
+        # total bytes (greedy balance); the last group takes the remainder
+        if len(groups) < n_groups - 1 and acc >= (len(groups) + 1) * total / n_groups:
+            groups.append(_close_group(cut, bucket_bytes))
+            cut = []
+    if cut or not groups:
+        groups.append(_close_group(cut, bucket_bytes))
+    return OverlapSchedule(layout=layout, groups=tuple(groups))
+
+
+def _close_group(cut: list[tuple[int, int, int]], bucket_bytes: float) -> OverlapGroup:
+    slices: list[GroupSlice] = []
+    for rank, gi, bi in cut:
+        last = slices[-1] if slices else None
+        if last is not None and last.group == gi and last.stop == bi:
+            slices[-1] = GroupSlice(gi, last.start, bi + 1)
+        else:
+            slices.append(GroupSlice(gi, bi, bi + 1))
+    return OverlapGroup(
+        slices=tuple(slices),
+        rank=max((r for r, _, _ in cut), default=0),
+        wire_bytes=int(bucket_bytes * len(cut)),
+    )

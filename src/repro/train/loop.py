@@ -9,6 +9,7 @@ from typing import Any, Callable, Iterator
 import jax
 
 from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
+from repro.configs.base import OverlapConfig
 from repro.core import optim
 from repro.core.compressors import get_compressor
 from repro.data import synthetic
@@ -43,6 +44,9 @@ class TrainJob:
     # gradient-exchange granularity: fixed-size buckets through repro.comm
     # (the default wire path); None falls back to per-leaf aggregation
     bucket_size: int | None = DEFAULT_BUCKET_SIZE
+    # async overlap: pipeline per-group compression + collectives with the
+    # backward (repro.overlap); None = one aggregator call after full grad
+    overlap: OverlapConfig | None = None
 
 
 def _local_chain(job: TrainJob) -> optim.Transform:
@@ -88,6 +92,7 @@ def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: C
             strategy=job.strategy, comp=comp, local_chain=chain, ef_axes=ef_axes,
             batch_example=example, state_example=state, microbatches=job.microbatches,
             bucket_size=bucket_size,
+            overlap_groups=job.overlap.n_groups if job.overlap else None,
         )
         state = jax.device_put(state, bundle.in_shardings[0])
         step_fn = bundle.jit()

@@ -43,7 +43,13 @@ def init_train_state(
 ) -> TrainState:
     """``bucket_size`` must match the value later passed to
     ``make_train_step`` — it selects bucketed (repro.comm) vs per-leaf EF
-    residual layout."""
+    residual layout.
+
+    The overlap schedule deliberately does NOT appear here: EF residuals are
+    keyed by (strategy, bucket_size) only, and the overlapped executor reads/
+    writes the same ``(n_buckets, bucket_size)`` stacks as the one-shot path
+    — so ``--overlap`` / ``--overlap-groups`` can change across restarts
+    without invalidating checkpoints or perturbing the trajectory."""
     params = transformer.init_params(cfg, key)
     opt_state = local_chain.init(params)
     w = ef_world(mesh, ef_axes) if mesh is not None and ef_axes else 1

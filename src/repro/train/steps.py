@@ -42,7 +42,9 @@ from repro.comm import bucketize as comm_bucketize
 from repro.comm import collective as comm_collective
 from repro.core import aggregation, optim
 from repro.core.compressors import Compressor
-from repro.models import transformer
+from repro.models import layers, transformer
+from repro.overlap import pipeline as overlap_pipeline
+from repro.overlap import schedule as overlap_schedule
 from repro.utils import compat
 from repro.models.act_sharding import activation_sharding
 from repro.models.config import ModelConfig
@@ -154,6 +156,93 @@ def _make_grad_fn(cfg: ModelConfig, microbatches: int, act_ctx):
     return accumulated
 
 
+def stageable(cfg: ModelConfig, microbatches: int) -> bool:
+    """True when the loss decomposes into embed | block-stack | head ``vjp``
+    stages. The block stack itself is a ``lax.scan``, so per-LAYER grads are
+    never splittable here — three stages is the finest checkpoint-boundary
+    chunking this model family admits; models that fail even this gate fall
+    back to post-hoc pipelining of compress/collective (the overlap executor
+    works either way)."""
+    return microbatches <= 1 and not cfg.encoder_layers and not cfg.num_patch_tokens
+
+
+def _make_staged_grad_fn(cfg: ModelConfig, act_ctx):
+    """value_and_grad chunked at the embed | stack | head reverse-AD
+    boundaries via per-stage ``jax.vjp``.
+
+    Numerically this is the same chain rule over the same primitives as
+    ``jax.value_and_grad`` of the fused loss (tests pin bitwise equality);
+    what changes is the *dependency structure* of the jit graph: head and
+    final-norm gradients are produced by ``vjp_head`` before the stack's
+    backward scan runs, and the embedding gradient only at the very end — so
+    the overlap executor's first bucket groups (rank 0 = head/final-norm, see
+    :mod:`repro.overlap.schedule`) can compress and issue their collectives
+    while the backward is still inside the scan.
+    """
+    tied = cfg.tie_embeddings
+
+    def staged(params, batch):
+        p_embed = params["embed"]
+        p_head = {"final_norm": params["final_norm"]}
+        if not tied:
+            p_head["head"] = params["head"]
+
+        def f_embed(pe):
+            with act_ctx():
+                x, _ = transformer.embed_inputs({"embed": pe}, cfg, batch)
+            return x
+
+        def f_stack(pb, x):
+            with act_ctx():
+                positions = 0 + jnp.arange(x.shape[1])
+                x1, _, aux = transformer._run_stack(pb, cfg, x, positions, None, 0, None)
+            return x1, aux
+
+        def f_head(ph, pe, x1):
+            with act_ctx():
+                x = layers.apply_norm(ph["final_norm"], x1, cfg.norm_type)
+                if tied:
+                    logits = x @ pe["table"].astype(x.dtype).T
+                else:
+                    logits = layers.apply_linear(ph["head"], x)
+                logits = logits.astype(jnp.float32)
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                labels = batch["labels"]
+                nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+                mask = batch.get("loss_mask", jnp.ones_like(nll))
+                return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+        x0, vjp_embed = jax.vjp(f_embed, p_embed)
+        (x1, aux), vjp_stack = jax.vjp(f_stack, params["blocks"], x0)
+        ce, vjp_head = jax.vjp(f_head, p_head, p_embed, x1)
+        total = ce
+        if cfg.is_moe:
+            total = (
+                total
+                + cfg.aux_loss_coef * aux["moe_aux_loss"]
+                + cfg.router_z_coef * aux["moe_z_loss"]
+            )
+
+        # reverse-AD in stage order: head grads first, embedding last
+        g_head, g_embed_head, dx1 = vjp_head(jnp.ones_like(ce))
+        daux = {
+            "moe_aux_loss": jnp.float32(cfg.aux_loss_coef if cfg.is_moe else 0.0),
+            "moe_z_loss": jnp.float32(cfg.router_z_coef if cfg.is_moe else 0.0),
+        }
+        g_blocks, dx0 = vjp_stack((dx1, daux))
+        (g_embed,) = vjp_embed(dx0)
+        if tied:  # the head's contribution to the shared table accumulates
+            g_embed = jax.tree.map(jnp.add, g_embed, g_embed_head)
+
+        grads = {"blocks": g_blocks, "embed": g_embed, "final_norm": g_head["final_norm"]}
+        if not tied:
+            grads["head"] = g_head["head"]
+        metrics = {"loss": ce, **aux}
+        return (total, metrics), grads
+
+    return staged
+
+
 def make_train_step(
     cfg: ModelConfig,
     mesh,
@@ -167,7 +256,13 @@ def make_train_step(
     state_example: TrainState,
     microbatches: int = 1,
     bucket_size: int | None = None,
+    overlap_groups: int | None = None,
 ) -> StepBundle:
+    if overlap_groups is not None and (strategy == "dense" or bucket_size is None):
+        raise ValueError(
+            "overlap_groups needs the bucketed EF path (an EF strategy with "
+            f"bucket_size set); got strategy={strategy!r}, bucket_size={bucket_size!r}"
+        )
     param_specs = rules.param_specs(state_example.params)
     opt_specs_base = jax.tree.map(
         lambda _: P(), state_example.opt_state
@@ -211,6 +306,7 @@ def make_train_step(
             cfg, mesh, rules, strategy=strategy, comp=comp, local_chain=local_chain,
             ef_axes=ef_axes, batch_example=batch_example, state_example=state_example,
             microbatches=microbatches, bucket_size=bucket_size,
+            overlap_groups=overlap_groups,
             param_specs=param_specs, opt_specs_base=opt_specs_base,
             batch_specs=batch_specs,
         )
@@ -301,22 +397,46 @@ def _make_bucketed_ef_step(
     state_example: TrainState,
     microbatches: int,
     bucket_size: int,
+    overlap_groups: int | None = None,
     param_specs,
     opt_specs_base,
     batch_specs,
 ) -> StepBundle:
-    """EF train step through the bucketed comm layer (see module docstring)."""
+    """EF train step through the bucketed comm layer (see module docstring).
+
+    With ``overlap_groups`` set the exchange runs through the overlap
+    pipeline instead of one aggregator call: a static
+    :class:`~repro.overlap.schedule.OverlapSchedule` groups the buckets by
+    reverse-AD availability and :func:`make_overlapped_aggregator` issues
+    per-group collectives as independent dataflow chains. When the model
+    admits it, the grad fn is the staged-``vjp`` variant so the head-stage
+    groups' collectives are data-ready before the backward scan finishes.
+    The trajectory is bitwise identical to the one-shot step.
+    """
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
     w = comm_collective.world_size(mesh, ef_axes)
     layout = comm_bucketize.build_layout(state_example.params, bucket_size)
-    agg_fn = comm_collective.make_bucketed_aggregator(
-        strategy, comp, layout, mesh, ef_axes
-    )
+    # a 1-worker world has no collective latency to hide — pipelining would
+    # be pure dispatch overhead, so overlap degenerates to the one-shot path
+    overlap = overlap_groups is not None and w > 1
+    if overlap:
+        schedule = overlap_schedule.build_schedule(
+            layout, state_example.params, n_groups=overlap_groups, comp=comp
+        )
+        agg_fn = overlap_pipeline.make_overlapped_aggregator(
+            strategy, comp, layout, schedule, mesh, ef_axes
+        )
+    else:
+        agg_fn = comm_collective.make_bucketed_aggregator(
+            strategy, comp, layout, mesh, ef_axes
+        )
 
     auto_dp = tuple(a for a in rules.dp_axes if a not in ef_axes)
-    grad_fn = _make_grad_fn(
-        cfg, microbatches, lambda: activation_sharding(auto_dp or None, "model")
-    )
+    act_ctx = lambda: activation_sharding(auto_dp or None, "model")
+    if overlap and stageable(cfg, microbatches):
+        grad_fn = _make_staged_grad_fn(cfg, act_ctx)
+    else:
+        grad_fn = _make_grad_fn(cfg, microbatches, act_ctx)
 
     def _split_workers(x):
         b = x.shape[0]

@@ -1,0 +1,360 @@
+"""Async overlap subsystem: scheduler determinism, ring-vs-allgather
+equivalence for every compressor, and bitwise trajectory equality of the
+overlapped EF step against the one-shot bucketed step.
+
+Multi-worker cases run in subprocesses (same isolation pattern as
+tests/test_distributed.py) so the main pytest session keeps one CPU device.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import bucketize, collective
+from repro.core.compressors import ScaledSignCompressor, density
+from repro.kernels import ef_sign, ops, ref
+from repro.launch.mesh import make_host_mesh, use_mesh
+from repro.overlap import (
+    build_schedule,
+    exposure_report,
+    make_overlapped_aggregator,
+    reverse_ad_ranks,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree():
+    return {
+        "embed": {"table": jnp.arange(40 * 8, dtype=jnp.float32).reshape(40, 8) * 0.01},
+        "blocks": [{"w": jnp.linspace(-1, 1, 300, dtype=jnp.float32)}],
+        "final_norm": {"g": jnp.ones((50,), jnp.float32)},
+        "head": {"w": jnp.linspace(1, -1, 90, dtype=jnp.float32)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+
+def test_reverse_ad_ranks_stage_order():
+    ranks = dict(zip(["blocks", "embed", "final_norm", "head"], reverse_ad_ranks(_tree())))
+    assert ranks["final_norm"] == ranks["head"] == 0  # grads first
+    assert ranks["blocks"] == 1
+    assert ranks["embed"] == 3  # embedding backward last
+
+
+def test_reverse_ad_ranks_fallback_reversed_flatten():
+    tree = {"a": jnp.zeros(3), "m": jnp.zeros(3), "z": jnp.zeros(3)}
+    assert reverse_ad_ranks(tree) == (2, 1, 0)
+
+
+def test_schedule_deterministic_covers_and_balances():
+    layout = bucketize.build_layout(_tree(), 64)
+    s1 = build_schedule(layout, _tree(), n_groups=3)
+    s2 = build_schedule(layout, _tree(), n_groups=3)
+    assert s1 == s2, "same layout must give identical groups"
+    # exact partition of the bucket set
+    seen = set()
+    for g in s1.groups:
+        for sl in g.slices:
+            for b in range(sl.start, sl.stop):
+                assert (sl.group, b) not in seen
+                seen.add((sl.group, b))
+    assert len(seen) == layout.n_buckets
+    # issue order follows reverse-AD availability; bytes are balanced
+    ranks = [g.rank for g in s1.groups]
+    assert ranks == sorted(ranks)
+    sizes = [g.wire_bytes for g in s1.groups]
+    assert max(sizes) <= 2 * min(sizes)
+
+
+def test_schedule_clamps_groups_and_rejects_bad_input():
+    layout = bucketize.build_layout(_tree(), 64)
+    assert build_schedule(layout, _tree(), n_groups=10_000).n_groups <= layout.n_buckets
+    assert build_schedule(layout, _tree(), n_groups=1).n_groups == 1
+    with pytest.raises(ValueError):
+        build_schedule(layout, _tree(), n_groups=0)
+    with pytest.raises(ValueError):
+        build_schedule(layout, {"wrong": jnp.zeros(3)}, n_groups=2)
+
+
+# ---------------------------------------------------------------------------
+# pipeline latency model
+# ---------------------------------------------------------------------------
+
+
+def test_exposure_report_single_group_is_fully_exposed():
+    rep = exposure_report([100.0], [40.0])
+    assert rep["exposed_us"] == 40.0 and rep["exposure_frac"] == 1.0
+
+
+def test_exposure_report_pipelining_hides_comm():
+    # 4 equal groups over a long backward: only the tail group's comm exposes
+    rep = exposure_report([25.0, 50.0, 75.0, 100.0], [10.0, 10.0, 10.0, 10.0])
+    assert rep["serial_comm_us"] == 40.0
+    assert rep["exposed_us"] == 10.0  # last group's hop
+    assert rep["exposed_us"] < rep["serial_comm_us"]
+    # comm-bound wire: hops back up against each other
+    rep = exposure_report([1.0, 2.0, 3.0, 4.0], [10.0, 10.0, 10.0, 10.0])
+    assert rep["exposed_us"] == pytest.approx(37.0)
+    # tail compute hides the last hop too
+    rep = exposure_report([25.0, 50.0, 75.0, 100.0], [10.0] * 4, tail_us=10.0)
+    assert rep["exposed_us"] == 0.0
+    with pytest.raises(ValueError):
+        exposure_report([2.0, 1.0], [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# fused decompress-accumulate kernel (ring hop)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_sign_accumulate_kernel_matches_ref():
+    rng = np.random.default_rng(3)
+    acc = jnp.asarray(rng.normal(size=(3, 4096)).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=(3, 4096)).astype(np.float32))
+    words, scales, _, _ = ops.ef_sign_bucket_step(p, jnp.zeros_like(p), force="ref")
+    want = ref.bucket_sign_accumulate_ref(acc, words, scales)
+    got = ef_sign.bucket_sign_accumulate(acc, words, scales, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # oracle itself: decode + add
+    np.testing.assert_allclose(
+        np.asarray(want - acc),
+        np.asarray(ref.bucket_sign_decode_ref(words, scales)),
+        rtol=1e-6,
+    )
+
+
+def test_fused_density_matches_definition():
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32) * 0.1)
+    _, _, _, dens = ops.ef_sign_bucket_step(g, e, force="ref")
+    np.testing.assert_allclose(
+        np.asarray(dens), np.asarray(jax.vmap(density)(g + e)), rtol=1e-6
+    )
+    # all-zero bucket (pure padding): density defined as 1.0
+    z = jnp.zeros((1, 128), jnp.float32)
+    assert float(ops.ef_sign_bucket_step(z, z, force="ref")[3][0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# single-device executor parity (W > 1 runs in subprocesses below)
+# ---------------------------------------------------------------------------
+
+
+def test_overlapped_aggregator_bitwise_single_device():
+    mesh = make_host_mesh(data=1, model=1)
+    tree = _tree()
+    layout = bucketize.build_layout(tree, 64)
+    sched = build_schedule(layout, tree, n_groups=3)
+    comp = ScaledSignCompressor()
+    buckets_w = tuple(b[None] for b in bucketize.flatten_buckets(layout, tree))
+    err = tuple(jnp.ones_like(b) * 0.1 for b in buckets_w)
+    key = jax.random.PRNGKey(0)
+    with use_mesh(mesh):
+        one = jax.jit(
+            collective.make_bucketed_aggregator("ef_allgather", comp, layout, mesh, ("data",))
+        )
+        ovl = jax.jit(
+            make_overlapped_aggregator("ef_allgather", comp, layout, sched, mesh, ("data",))
+        )
+        o1, o2 = one(buckets_w, err, (), key), ovl(buckets_w, err, (), key)
+    for a, b in zip(o1[0] + o1[1], o2[0] + o2[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(o1[3].wire_bytes_per_device) == float(o2[3].wire_bytes_per_device)
+    assert float(o1[3].mean_density) == float(o2[3].mean_density)
+
+
+def test_overlapped_aggregator_rejects_alltoall():
+    mesh = make_host_mesh(data=1, model=1)
+    layout = bucketize.build_layout(_tree(), 64)
+    sched = build_schedule(layout, _tree(), n_groups=2)
+    with pytest.raises(ValueError, match="ef_alltoall"):
+        make_overlapped_aggregator("ef_alltoall", None, layout, sched, mesh, ("data",))
+
+
+def test_ef_ring_rejected_on_per_leaf_path():
+    from repro.core import aggregation
+
+    with pytest.raises(ValueError, match="bucketed-only"):
+        aggregation.init_agg_state("ef_ring", {"x": jnp.zeros(8)}, world=2, bucket_size=None)
+
+
+def test_overlap_config_from_args():
+    from repro.configs.base import DEFAULT_OVERLAP_GROUPS, OverlapConfig
+
+    assert OverlapConfig.from_args(False, None) is None
+    assert OverlapConfig.from_args(True, None).n_groups == DEFAULT_OVERLAP_GROUPS
+    assert OverlapConfig.from_args(False, 2).n_groups == 2  # implies --overlap
+    with pytest.raises(ValueError):
+        OverlapConfig.from_args(True, 0)
+
+
+def test_train_step_rejects_overlap_without_buckets():
+    from repro.train import steps as ST
+
+    with pytest.raises(ValueError, match="overlap_groups"):
+        ST.make_train_step(
+            None, None, None, strategy="dense", comp=None, local_chain=None,
+            ef_axes=(), batch_example=None, state_example=None,
+            bucket_size=None, overlap_groups=4,
+        )
+
+
+def test_staged_grad_fn_bitwise_matches_plain():
+    from repro.configs import get_config, reduced
+    from repro.models import transformer
+    from repro.models.act_sharding import activation_sharding
+    from repro.train import steps as ST
+
+    cfg = reduced(get_config("llama3_2_1b"))
+    assert ST.stageable(cfg, 1)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size),
+    }
+    act = lambda: activation_sharding(None, "model")
+    (l1, m1), g1 = jax.jit(ST._make_grad_fn(cfg, 1, act))(params, batch)
+    (l2, m2), g2 = jax.jit(ST._make_staged_grad_fn(cfg, act))(params, batch)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert jax.tree.structure(g1) == jax.tree.structure(g2)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in m1:
+        np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]))
+
+
+# ---------------------------------------------------------------------------
+# multi-worker subprocesses
+# ---------------------------------------------------------------------------
+
+_RING_DRIVER = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(%(repo)r, "src"))
+import jax, jax.numpy as jnp, numpy as np
+from repro.comm import bucketize, collective
+from repro.core.compressors import get_compressor
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+mesh = make_host_mesh(data=4, model=1)
+rng = np.random.default_rng(0)
+tree = {"a": jnp.asarray(rng.normal(size=(700,)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(37, 11)).astype(np.float32))}
+layout = bucketize.build_layout(tree, 128)
+buckets = bucketize.flatten_buckets(layout, tree)
+buckets_w = tuple(jnp.asarray(rng.normal(size=(4,) + b.shape).astype(np.float32)) for b in buckets)
+err_w = tuple(jnp.asarray(rng.normal(size=b.shape).astype(np.float32) * 0.1) for b in buckets_w)
+key = jax.random.PRNGKey(0)
+out = {}
+with use_mesh(mesh):
+    for name, kw in [("scaled_sign", {}), ("sign", {}), ("block_scaled_sign", {}),
+                     ("top_k", {"k": 16}), ("random_k", {"k": 16}),
+                     ("qsgd", {"s": 7}), ("identity", {})]:
+        comp = get_compressor(name, **kw)
+        ag = jax.jit(collective.make_bucketed_aggregator(
+            "ef_allgather", comp, layout, mesh, ("data",)))
+        ring = jax.jit(collective.make_bucketed_aggregator(
+            "ef_ring", comp, layout, mesh, ("data",)))
+        o1, o2 = ag(buckets_w, err_w, (), key), ring(buckets_w, err_w, (), key)
+        # canonical-slot ring: same payloads, same decode → bitwise equal
+        agg_equal = all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(o1[0], o2[0]))
+        err_equal = all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(o1[1], o2[1]))
+        out[name] = {"agg_equal": agg_equal, "err_equal": err_equal,
+                     "wire_equal": float(o1[3].wire_bytes_per_device)
+                                   == float(o2[3].wire_bytes_per_device)}
+print(json.dumps(out))
+"""
+
+_STEP_DRIVER = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(%(repo)r, "src"))
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced
+from repro.core import optim
+from repro.core.compressors import ScaledSignCompressor
+from repro.launch.mesh import make_host_mesh, ef_axis_names, use_mesh
+from repro.sharding.rules import ShardingRules
+from repro.train.state import init_train_state
+from repro.train import steps as ST
+
+W = %(world)d
+cfg = reduced(get_config("llama3_2_1b"))
+mesh = make_host_mesh(data=W, model=2) if W > 1 else make_host_mesh(data=1, model=1)
+key = jax.random.PRNGKey(0)
+rules = ShardingRules(cfg, mesh, "tp")
+ef_axes = ef_axis_names(mesh, "tp")
+chain = optim.sgd(0.02)
+
+def run(overlap_groups, strategy="ef_allgather"):
+    with use_mesh(mesh):
+        state = init_train_state(cfg, key, chain, strategy, mesh, ef_axes, bucket_size=4096)
+        batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}
+        bundle = ST.make_train_step(cfg, mesh, rules, strategy=strategy,
+            comp=ScaledSignCompressor(), local_chain=chain, ef_axes=ef_axes,
+            batch_example=batch, state_example=state, bucket_size=4096,
+            overlap_groups=overlap_groups)
+        state = jax.device_put(state, bundle.in_shardings[0])
+        batch = jax.device_put(batch, bundle.in_shardings[1])
+        fn = bundle.jit()
+        traj = []
+        for _ in range(5):
+            state, (loss, m) = fn(state, batch)
+            traj.append(float(loss))
+        return traj, jax.device_get(jax.tree.leaves(state.params)), float(m["wire_bytes"])
+
+t1, p1, w1 = run(None)
+t2, p2, w2 = run(4)
+bitwise = (t1 == t2) and all(np.array_equal(a, b) for a, b in zip(p1, p2))
+tr, pr, wr = run(None, strategy="ef_ring")
+print(json.dumps({"bitwise": bool(bitwise), "wire_equal": w1 == w2,
+                  "traj": t1, "ring_traj": tr, "ring_wire": wr, "wire": w1}))
+"""
+
+
+def _run_driver(code_tmpl, **kw):
+    code = code_tmpl % {"repo": REPO, **kw}
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_ring_matches_allgather_every_compressor():
+    out = _run_driver(_RING_DRIVER)
+    for name, r in out.items():
+        # same payloads in canonical slots + the same decode-mean → bitwise
+        assert r["agg_equal"], f"{name}: ring aggregate must equal allgather"
+        assert r["err_equal"], f"{name}: local EF residuals must be identical"
+        assert r["wire_equal"], f"{name}: ring must bill allgather's total bytes"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("world", [1, 2, 4])
+def test_overlapped_step_bitwise_trajectory(world):
+    out = _run_driver(_STEP_DRIVER, world=world)
+    assert out["bitwise"], f"W={world}: overlapped trajectory diverged: {out['traj']}"
+    assert out["wire_equal"]
+    # ring strategy trains too, on the same wire bill as allgather
+    assert out["ring_traj"][-1] < out["ring_traj"][0], out["ring_traj"]
+    assert out["ring_wire"] == out["wire"]
