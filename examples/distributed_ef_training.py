@@ -29,7 +29,8 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--strategy", default="ef_allgather",
                     choices=["dense", "ef_allgather", "ef_ring", "ef_alltoall",
-                             "majority_vote"])
+                             "majority_vote", "ef_coord_median",
+                             "ef_trimmed_mean", "ef_norm_filter"])
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--overlap", action="store_true",
@@ -37,10 +38,17 @@ def main():
                     "backward (repro.overlap) and report comm exposure per step")
     ap.add_argument("--overlap-groups", type=int, default=None,
                     help="overlap pipeline depth (implies --overlap)")
+    ap.add_argument("--byz-attack", default=None,
+                    help="corrupt EF-worker lanes (sign_flip | scaled_noise | "
+                    "zero_out | const_drift; repro.comm.adversary)")
+    ap.add_argument("--byz-fraction", type=float, default=None,
+                    help="fraction of workers the injector corrupts")
+    ap.add_argument("--byz-f", type=int, default=None,
+                    help="declared tolerance for the robust strategies (2f < W)")
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.configs.base import OverlapConfig
+    from repro.configs.base import ByzConfig, OverlapConfig
     from repro.launch.mesh import make_host_mesh
     from repro.train.loop import TrainJob, run_training
 
@@ -56,10 +64,11 @@ def main():
 
     mesh = make_host_mesh(data=4, model=2)
     overlap = OverlapConfig.from_args(args.overlap, args.overlap_groups)
+    byz = ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f)
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
         lr=0.01, optimizer="sgd", strategy=args.strategy, policy="tp",
-        log_every=20, overlap=overlap,
+        log_every=20, overlap=overlap, byz=byz,
     )
 
     # --overlap: report per step how much of the serial comm bill the

@@ -13,7 +13,7 @@ import dataclasses
 from typing import Callable
 
 KNOWN_SUITES = (
-    "kernels", "aggregation", "comm", "overlap", "convergence", "serve", "roofline", "smoke",
+    "kernels", "aggregation", "comm", "overlap", "byz", "convergence", "serve", "roofline", "smoke",
 )
 
 

@@ -3,6 +3,7 @@
 
 from repro.bench.suites import (  # noqa: F401
     aggregation,
+    byz,
     comm,
     convergence,
     kernels,

@@ -17,6 +17,13 @@ every :class:`repro.core.compressors.Compressor`:
     mesh axis so jax 0.4.37's partial-manual ``IsManualSubgroup`` abort is
     never reachable (collectives over a manual subgroup while other axes stay
     auto is exactly the broken configuration; see tests/test_distributed.py).
+``robust``
+    Byzantine-robust decode-side combiners (coordinate median, trimmed mean,
+    distance-to-median filtering) behind the same aggregator seam — the
+    ``ef_coord_median`` / ``ef_trimmed_mean`` / ``ef_norm_filter`` strategies.
+``adversary``
+    Fault injection for the EF-worker gradient lanes (sign flip, scaled
+    noise, zero-out, colluding constant drift) driving the byz bench/tests.
 
 The per-leaf strategies in :mod:`repro.core.aggregation` remain the
 ``bucket_size=None`` fallback — they preserve leaf shardings (no flatten), at
@@ -32,21 +39,27 @@ from repro.comm.bucketize import (
 from repro.comm.collective import make_bucketed_aggregator
 from repro.comm.compressed import (
     BucketPayload,
+    decode_buckets_stack,
     decode_mean_buckets,
     ef_encode_buckets,
     init_error_buckets,
     init_server_buckets,
 )
+from repro.comm.robust import ROBUST_STRATEGIES, robust_combine, validate_tolerance
 
 __all__ = [
     "BucketLayout",
     "BucketPayload",
+    "ROBUST_STRATEGIES",
     "build_layout",
+    "decode_buckets_stack",
     "decode_mean_buckets",
     "ef_encode_buckets",
     "flatten_buckets",
     "init_error_buckets",
     "init_server_buckets",
     "make_bucketed_aggregator",
+    "robust_combine",
     "unflatten_buckets",
+    "validate_tolerance",
 ]

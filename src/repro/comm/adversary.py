@@ -1,0 +1,66 @@
+"""Fault injection: corrupt selected EF-worker gradient lanes.
+
+The injector runs inside the train step, immediately after the vmap'd
+per-worker grad computation (:mod:`repro.train.steps`): the first
+``floor(fraction * W)`` lanes of the leading EF-worker axis are replaced
+according to the configured attack, before the local optimizer chain and the
+EF compression see them — i.e. the adversary is a *worker submitting bad
+gradients*, and its own EF residual / momentum state evolves from the
+corrupted stream exactly as a real traitor's would.
+
+Attacks (:class:`repro.configs.base.ByzConfig`):
+
+``sign_flip``
+    g -> -g. Norm-preserving (defeats plain-norm filtering) and the paper's
+    natural foil for sign compression: the lane votes against every
+    coordinate.
+``scaled_noise``
+    g -> scale * N(0, I), drawn per step / per leaf / per lane.
+``zero_out``
+    g -> 0 — the silent straggler.
+``const_drift``
+    g -> scale * 1, identical on every adversarial lane — the colluding
+    attack that biases a plain mean by ``n_attackers/W * scale`` per step.
+
+Zero attackers is a python-level no-op (the input pytree is returned
+unchanged), so byz-disabled trajectories stay bitwise identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ByzConfig
+
+
+def n_attackers(fraction: float, world: int) -> int:
+    """``floor(fraction * W)`` — how many leading lanes the injector owns."""
+    return int(fraction * world)
+
+
+def corrupt_worker_tree(byz: ByzConfig, tree_w, key, *, world: int):
+    """Replace lanes ``[0, n_attackers)`` of every leaf per ``byz.attack``.
+
+    ``tree_w`` leaves carry a leading ``world``-sized worker axis. ``key``
+    seeds the scaled_noise draw (unused by the deterministic attacks).
+    """
+    n = n_attackers(byz.fraction, world)
+    if n == 0:
+        return tree_w
+    leaves, treedef = jax.tree.flatten(tree_w)
+    bad = jnp.arange(world) < n
+    out = []
+    for i, g in enumerate(leaves):
+        mask = bad.reshape((world,) + (1,) * (g.ndim - 1))
+        if byz.attack == "sign_flip":
+            evil = -g
+        elif byz.attack == "zero_out":
+            evil = jnp.zeros_like(g)
+        elif byz.attack == "scaled_noise":
+            noise = jax.random.normal(jax.random.fold_in(key, i), g.shape, jnp.float32)
+            evil = (byz.scale * noise).astype(g.dtype)
+        else:  # const_drift — every adversarial lane submits the same vector
+            evil = jnp.full_like(g, byz.scale)
+        out.append(jnp.where(mask, evil, g))
+    return jax.tree.unflatten(treedef, out)

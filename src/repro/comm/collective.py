@@ -29,6 +29,13 @@ Strategies (mirroring ``repro.core.aggregation``):
                    a server-side EF residual, and all-gathers the result.
                    Wire ≈ 2·d/8 bytes, W-independent.
 ``majority_vote``  sign-of-sum-of-signs, no EF (the known-brittle baseline).
+``ef_coord_median`` / ``ef_trimmed_mean`` / ``ef_norm_filter``
+                   Byzantine-robust variants: identical payloads, all-gather
+                   and wire bill as ef_allgather, but the decode combines the
+                   per-worker stack with an order-statistics estimator
+                   (:mod:`repro.comm.robust`) parameterized by the declared
+                   adversary budget ``byz_f``. ``byz_f=0`` is bitwise-equal
+                   to ef_allgather.
 
 Wire accounting is exact per bucket: a payload for one bucket costs
 ``comp.wire_bits(bucket_size)`` bits and every strategy counts how many
@@ -42,14 +49,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import bucketize, compressed
+from repro.comm import bucketize, compressed, robust
 from repro.core.aggregation import AggInfo
 from repro.core.compressors import Compressor, ScaledSignCompressor
 from repro.utils import compat
 
 AxisNames = tuple[str, ...]
 
-_EF_STRATEGIES = ("ef_allgather", "ef_ring", "ef_alltoall")
+_EF_STRATEGIES = ("ef_allgather", "ef_ring", "ef_alltoall") + robust.ROBUST_STRATEGIES
 STRATEGIES = ("dense",) + _EF_STRATEGIES + ("majority_vote",)
 
 
@@ -85,11 +92,17 @@ def make_bucketed_aggregator(
     layout: bucketize.BucketLayout,
     mesh,
     ef_axes: AxisNames,
+    *,
+    byz_f: int = 0,
 ):
     """Build ``fn(buckets_w, err_w, srv_w, key) -> (agg, new_err_w, new_srv_w,
     info)`` where the ``_w`` pytrees carry a leading stacked EF-world axis
     sharded over ``ef_axes`` and ``agg`` is the replicated aggregated update,
     one ``(n_buckets, bucket_size)`` fp32 array per dtype group.
+
+    ``byz_f`` is the declared adversary budget handed to the robust
+    strategies; invalid combinations (non-robust strategy with ``byz_f`` set,
+    or ``2*byz_f >= W``) raise upfront.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown bucketed strategy {strategy!r}; options: {STRATEGIES}")
@@ -101,6 +114,7 @@ def make_bucketed_aggregator(
 
         ring_lib.ring_axis(ef_axes)  # single-axis EF world required
     w = world_size(mesh, ef_axes)
+    robust.validate_tolerance(strategy, byz_f, w)
     bs = layout.bucket_size
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
     masks = tuple(bucketize.valid_mask(layout, gi) for gi in range(len(layout.groups)))
@@ -132,12 +146,16 @@ def make_bucketed_aggregator(
                 dens.append(jnp.float32(1.0))
                 wire_bits += (w - 1) * nb * bs  # d bits per peer payload
 
-            elif strategy == "ef_allgather":
+            elif strategy == "ef_allgather" or strategy in robust.ROBUST_STRATEGIES:
                 payload, ne, d_b = compressed.ef_encode_buckets(
                     comp, b, e, mask=masks[gi], key=gkey
                 )
                 gathered = _gather_payload(payload, ef_axes)
-                outs.append(compressed.decode_mean_buckets(comp, gathered, bs))
+                if strategy == "ef_allgather":
+                    outs.append(compressed.decode_mean_buckets(comp, gathered, bs))
+                else:
+                    # same payloads, same wire bill — robustness is decode-side
+                    outs.append(robust.robust_combine(strategy, comp, gathered, bs, byz_f))
                 new_errs.append(ne[None])
                 dens.append(jnp.mean(d_b))
                 wire_bits += (w - 1) * nb * bucket_bits

@@ -127,6 +127,20 @@ def decode_buckets(comp: Compressor, payload: BucketPayload, bucket_size: int) -
     return jax.vmap(lambda pay: comp.decompress(pay, bucket_size))(payload.data)
 
 
+def decode_buckets_stack(comp: Compressor, gathered: BucketPayload, bucket_size: int) -> jax.Array:
+    """Per-worker reconstructions of W gathered payloads.
+
+    ``gathered`` leaves carry a leading (W,) axis; returns (W, n_buckets,
+    bucket_size) fp32 — the robust-aggregation decode path
+    (:mod:`repro.comm.robust`), which needs every worker's vector
+    materialized for order statistics, unlike the two-buffer running mean of
+    :func:`decode_mean_buckets`.
+    """
+    return jax.vmap(lambda data: decode_buckets(comp, BucketPayload(data=data), bucket_size))(
+        gathered.data
+    )
+
+
 def decode_mean_buckets(comp: Compressor, gathered: BucketPayload, bucket_size: int) -> jax.Array:
     """Mean reconstruction of W gathered payloads.
 

@@ -1,0 +1,132 @@
+"""Byzantine-robust combination of per-worker bucket payloads.
+
+The robust strategies (``ef_coord_median``, ``ef_trimmed_mean``,
+``ef_norm_filter``) reuse the ``ef_allgather`` exchange wholesale: every
+worker runs the same per-bucket EF compression, payloads ride the same
+all-gather, and the wire bill is identical — robustness is purely a
+*decode-side* change. Instead of the two-buffer running mean of
+``compressed.decode_mean_buckets``, the combiner materializes the full
+``(W, n_buckets, bucket_size)`` stack of per-worker reconstructions and
+applies an order-statistics estimator over the worker axis (Ghosh et al.,
+arXiv:1911.09721 — error feedback composes with robust aggregation):
+
+``ef_coord_median``
+    coordinate-wise median (even W: mean of the two middle order
+    statistics). Tolerates up to ``(W-1)//2`` adversaries per coordinate.
+``ef_trimmed_mean``
+    drop the ``f`` largest and ``f`` smallest values per coordinate, mean
+    the surviving ``W - 2f``.
+``ef_norm_filter``
+    score each worker by L2 distance of its decoded vector to the
+    coordinate-wise median, drop the ``f`` farthest, mean the survivors.
+    Distance-to-center (not plain norm) is deliberate: a sign-flip adversary
+    is norm-preserving, so raw-norm filtering would wave it through.
+
+``byz_f`` is the *declared* adversary budget, a static config — separate
+from how many lanes the fault injector (:mod:`repro.comm.adversary`)
+actually corrupts; the byz bench measures over- and under-declared budgets.
+At ``byz_f == 0`` every strategy short-circuits to the literal
+``decode_mean_buckets`` call of the ``ef_allgather`` branch, so a robust
+strategy in a declared-honest world is bitwise-equal to ``ef_allgather`` by
+construction. The order-statistics estimators break down at ``2f >= W``
+(fewer honest than adversarial order statistics), which
+:func:`validate_tolerance` rejects upfront.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import compressed
+from repro.core.compressors import Compressor
+
+ROBUST_STRATEGIES = ("ef_coord_median", "ef_trimmed_mean", "ef_norm_filter")
+
+
+def max_tolerance(world: int) -> int:
+    """Largest declarable adversary budget: breakdown needs 2f < W."""
+    return max(0, (world - 1) // 2)
+
+
+def validate_tolerance(strategy: str, byz_f: int, world: int) -> None:
+    """Reject strategy/budget combinations that silently degrade.
+
+    Mirrors the upfront ``ef_ring``+``bucket_size=None`` guard: a trimmed
+    mean with ``2f >= W`` trims every honest order statistic and a non-robust
+    strategy ignores ``byz_f`` entirely — both fail here, at build time,
+    naming the valid range.
+    """
+    if byz_f < 0:
+        raise ValueError(f"byz_f must be >= 0, got {byz_f}")
+    if strategy not in ROBUST_STRATEGIES:
+        if byz_f:
+            raise ValueError(
+                f"byz_f={byz_f} only applies to the robust strategies "
+                f"{ROBUST_STRATEGIES}; strategy {strategy!r} would silently ignore it"
+            )
+        return
+    if byz_f and 2 * byz_f >= world:
+        raise ValueError(
+            f"{strategy}: declared tolerance byz_f={byz_f} breaks down at "
+            f"world={world} (needs 2*byz_f < W); valid range here: "
+            f"0 <= byz_f <= {max_tolerance(world)}"
+        )
+
+
+def coord_median(stack: jax.Array) -> jax.Array:
+    """Coordinate-wise median over the leading worker axis."""
+    w = stack.shape[0]
+    s = jnp.sort(stack, axis=0)
+    mid = w // 2
+    if w % 2:
+        return s[mid]
+    return 0.5 * (s[mid - 1] + s[mid])
+
+
+def trimmed_mean(stack: jax.Array, f: int) -> jax.Array:
+    """Coordinate-wise mean of the order statistics ``[f : W - f]``."""
+    w = stack.shape[0]
+    s = jnp.sort(stack, axis=0)
+    return jnp.mean(s[f : w - f], axis=0)
+
+
+def norm_filtered_mean(stack: jax.Array, f: int) -> jax.Array:
+    """Mean of the ``W - f`` workers closest (L2) to the coordinate median.
+
+    Ties in the distance scores break deterministically by worker index
+    (``argsort`` is stable), so the combine is a pure function of the stack.
+    """
+    w = stack.shape[0]
+    center = coord_median(stack)
+    d2 = jnp.sum((stack - center[None]) ** 2, axis=tuple(range(1, stack.ndim)))
+    order = jnp.argsort(d2)
+    keep = jnp.zeros((w,), jnp.float32).at[order[: w - f]].set(1.0)
+    keep = keep.reshape((w,) + (1,) * (stack.ndim - 1))
+    return jnp.sum(stack * keep, axis=0) / (w - f)
+
+
+def robust_combine(
+    strategy: str,
+    comp: Compressor,
+    gathered: compressed.BucketPayload,
+    bucket_size: int,
+    byz_f: int,
+) -> jax.Array:
+    """Robustly combine W gathered payloads into one (nb, bs) fp32 update.
+
+    ``gathered`` leaves carry a leading (W,) worker axis — exactly what the
+    ``ef_allgather`` branch holds after its all-gather. ``byz_f == 0`` takes
+    the literal decode-mean path so the declared-honest trajectory stays
+    bitwise-equal to ``ef_allgather``.
+    """
+    if byz_f == 0:
+        return compressed.decode_mean_buckets(comp, gathered, bucket_size)
+    stack = compressed.decode_buckets_stack(comp, gathered, bucket_size)
+    if strategy == "ef_coord_median":
+        return coord_median(stack)
+    if strategy == "ef_trimmed_mean":
+        return trimmed_mean(stack, byz_f)
+    if strategy == "ef_norm_filter":
+        return norm_filtered_mean(stack, byz_f)
+    raise ValueError(f"unknown robust strategy {strategy!r}; options: {ROBUST_STRATEGIES}")

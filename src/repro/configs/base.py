@@ -44,6 +44,56 @@ class OverlapConfig:
             return OverlapConfig()
         return OverlapConfig(n_groups=overlap_groups)  # 0/negative: __post_init__ rejects
 
+
+# attacks the fault injector (repro.comm.adversary) can mount on the
+# EF-worker-axis gradient lanes
+BYZ_ATTACKS = ("sign_flip", "scaled_noise", "zero_out", "const_drift")
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzConfig:
+    """Byzantine knobs: the attack the fault injector mounts and the defense
+    budget the robust aggregation strategies assume.
+
+    ``fraction`` selects ``floor(fraction * W)`` adversarial lanes on the EF
+    worker axis; ``f`` is the DECLARED tolerance handed to the robust
+    strategies (order statistics trimmed / workers filtered). They are
+    deliberately separate knobs: over- and under-declared budgets are exactly
+    what the byz bench suite measures. ``scale`` sets the magnitude of the
+    scaled_noise / const_drift attacks.
+    """
+
+    attack: str = "sign_flip"
+    fraction: float = 0.0
+    scale: float = 10.0
+    f: int = 0
+
+    def __post_init__(self):
+        if self.attack not in BYZ_ATTACKS:
+            raise ValueError(f"unknown byz attack {self.attack!r}; options: {BYZ_ATTACKS}")
+        if not 0.0 <= self.fraction < 1.0:
+            raise ValueError(f"byz fraction must be in [0, 1), got {self.fraction}")
+        if self.f < 0:
+            raise ValueError(f"byz tolerance f must be >= 0, got {self.f}")
+
+    @staticmethod
+    def from_args(attack, fraction, f, scale=None) -> "ByzConfig | None":
+        """CLI plumbing: any of ``--byz-attack`` / ``--byz-fraction`` /
+        ``--byz-f`` switches the byz path on; unset knobs keep defaults."""
+        if attack is None and fraction is None and f is None:
+            return None
+        kw = {}
+        if attack is not None:
+            kw["attack"] = attack
+        if fraction is not None:
+            kw["fraction"] = fraction
+        if f is not None:
+            kw["f"] = f
+        if scale is not None:
+            kw["scale"] = scale
+        return ByzConfig(**kw)
+
+
 ARCH_IDS = [
     "granite_moe_1b_a400m",
     "llama3_2_1b",

@@ -126,6 +126,45 @@ def bucketed_sign_ring_wire_bytes(n_buckets: int, bucket_size: int, world: int) 
     return (world - 1) * bucketed_sign_ring_per_step_bytes(n_buckets, bucket_size)
 
 
+def bucketed_sign_robust_wire_bytes(n_buckets: int, bucket_size: int, world: int) -> float:
+    """Robust variants (coord-median / trimmed-mean / norm-filter) ship
+    exactly the ef_allgather payloads over the same all-gather — robustness
+    is pure decode-side compute, so the wire bill is identical by design."""
+    return bucketed_sign_allgather_wire_bytes(n_buckets, bucket_size, world)
+
+
+def robust_decode_cost_model(
+    n_buckets: int, bucket_size: int, world: int, *, byz_f: int = 1, kind: str = "ef_coord_median"
+) -> dict:
+    """Analytic decode-side cost of a robust combine (repro.comm.robust).
+
+    What the robust strategies pay for the unchanged wire bill:
+    ``stack_hbm_bytes`` is the (W, n_buckets, bucket_size) fp32
+    materialization the two-buffer running mean of ef_allgather avoids;
+    ``sort_flops`` models the per-coordinate worker-axis sort (W log2 W
+    compares); ``reduce_flops`` the estimator-specific combine (mid-select,
+    kept-order-stat mean, or distance pass + filtered mean). The byz bench
+    suite gates these exactly, like the wire models of the other strategies.
+    """
+    d = float(n_buckets * bucket_size)
+    sort = d * world * math.log2(world) if world > 1 else 0.0
+    if kind == "ef_coord_median":
+        reduce_flops = d
+    elif kind == "ef_trimmed_mean":
+        reduce_flops = d * (world - 2 * byz_f)
+    elif kind == "ef_norm_filter":
+        # distance-to-median pass (3 flops/coord/worker) + filtered mean
+        reduce_flops = d * (3 * world + (world - byz_f))
+    else:
+        raise ValueError(f"unknown robust kind {kind!r}")
+    return {
+        "stack_hbm_bytes": 4.0 * world * d,
+        "sort_flops": float(sort),
+        "reduce_flops": float(reduce_flops),
+        "total_flops": float(sort + reduce_flops),
+    }
+
+
 def ring_latency_model(
     n_buckets: int, bucket_size: int, world: int, *, bytes_per_us: float
 ) -> dict:
@@ -192,10 +231,12 @@ def init_agg_state(
         # local import: repro.comm depends on this module for AggInfo
         from repro.comm import bucketize, compressed
 
+        from repro.comm.robust import ROBUST_STRATEGIES
+
         layout = bucketize.build_layout(params, bucket_size)
         worker_error = (
             compressed.init_error_buckets(layout)
-            if strategy in ("ef_allgather", "ef_ring", "ef_alltoall")
+            if strategy in ("ef_allgather", "ef_ring", "ef_alltoall") + ROBUST_STRATEGIES
             else ()
         )
         server_error = (
@@ -217,6 +258,11 @@ def init_agg_state(
         raise ValueError(
             "ef_ring is bucketed-only (repro.overlap.ring): the per-leaf "
             "fallback has no ring implementation — set a bucket_size"
+        )
+    if strategy in ("ef_coord_median", "ef_trimmed_mean", "ef_norm_filter"):
+        raise ValueError(
+            f"{strategy} is bucketed-only (repro.comm.robust): the per-leaf "
+            "fallback has no robust decode path — set a bucket_size"
         )
     if strategy in ("ef_allgather", "ef_alltoall"):
         worker_error = jax.tree.map(zeros, params)

@@ -7,8 +7,11 @@
 On this CPU container use ``--reduced`` (the smoke variant); on a real
 cluster drop it and point ``--mesh-data/--mesh-model`` at the slice. The
 ``--strategy`` flag selects the gradient exchange (dense | ef_allgather |
-ef_ring | ef_alltoall | majority_vote); ``--overlap`` pipelines the
-compressed exchange with backward compute (see README "Async overlap").
+ef_ring | ef_alltoall | majority_vote | ef_coord_median | ef_trimmed_mean |
+ef_norm_filter); ``--overlap`` pipelines the compressed exchange with
+backward compute (see README "Async overlap"); ``--byz-attack`` /
+``--byz-fraction`` corrupt EF-worker lanes and ``--byz-f`` sets the robust
+strategies' declared tolerance (see README "Byzantine robustness").
 """
 
 from __future__ import annotations
@@ -17,7 +20,7 @@ import argparse
 import json
 
 from repro.configs import get_config, reduced as make_reduced
-from repro.configs.base import OverlapConfig
+from repro.configs.base import BYZ_ATTACKS, ByzConfig, OverlapConfig
 from repro.launch.mesh import make_host_mesh
 from repro.train.loop import TrainJob, run_training
 
@@ -55,6 +58,24 @@ def main():
         "--overlap-groups", type=int, default=None,
         help="overlap pipeline depth (bucket groups per step; implies --overlap)",
     )
+    ap.add_argument(
+        "--byz-attack", default=None, choices=list(BYZ_ATTACKS),
+        help="fault injection: corrupt EF-worker lanes with this attack "
+        "(repro.comm.adversary; any --byz-* flag enables the byz path)",
+    )
+    ap.add_argument(
+        "--byz-fraction", type=float, default=None,
+        help="fraction of EF workers the injector corrupts (floor(frac*W) lanes)",
+    )
+    ap.add_argument(
+        "--byz-f", type=int, default=None,
+        help="declared adversary tolerance for the robust strategies "
+        "(ef_coord_median / ef_trimmed_mean / ef_norm_filter; needs 2f < W)",
+    )
+    ap.add_argument(
+        "--byz-scale", type=float, default=None,
+        help="attack magnitude for scaled_noise / const_drift (default 10.0)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -72,6 +93,7 @@ def main():
         compressor=args.compressor, policy=args.policy, seed=args.seed,
         microbatches=args.microbatches,
         overlap=OverlapConfig.from_args(args.overlap, args.overlap_groups),
+        byz=ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f, args.byz_scale),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, **kw,
     )
     _, history = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))

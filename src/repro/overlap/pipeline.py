@@ -106,8 +106,7 @@ def make_overlapped_aggregator(
                     e = err[sl.group][0][sl.start : sl.stop]
                     ks = keys_full[sl.group]
                     payload, ne, d_b = compressed.ef_encode_buckets(
-                        comp, b, e, mask=m,
-                        keys=None if ks is None else ks[sl.start : sl.stop],
+                        comp, b, e, mask=m, keys=None if ks is None else ks[sl.start : sl.stop]
                     )
                     if strategy == "ef_ring":
                         out = ring_lib.ring_decode_mean(comp, payload, bs, ef_axes, w)

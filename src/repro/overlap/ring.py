@@ -113,6 +113,4 @@ def ring_decode_mean(
         # overlaps the next hop's DMA just like the fused accumulate did
         slots = store(slots, nxt, (widx - t - 1) % world)
         inflight = compressed.BucketPayload(data=nxt)
-    return compressed.decode_mean_buckets(
-        comp, compressed.BucketPayload(data=slots), bucket_size
-    )
+    return compressed.decode_mean_buckets(comp, compressed.BucketPayload(data=slots), bucket_size)

@@ -162,7 +162,9 @@ def build_schedule(
         )
     ranks = _bucket_ranks(layout, leaf_ranks)
     ordered = sorted(
-        ((ranks[gi][bi], gi, bi) for gi, g in enumerate(layout.groups) for bi in range(g.n_buckets))
+        (ranks[gi][bi], gi, bi)
+        for gi, g in enumerate(layout.groups)
+        for bi in range(g.n_buckets)
     )
     bucket_bytes = comp.wire_bits(layout.bucket_size) / 8.0
     n_groups = min(n_groups, len(ordered))

@@ -9,7 +9,7 @@ from typing import Any, Callable, Iterator
 import jax
 
 from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
-from repro.configs.base import OverlapConfig
+from repro.configs.base import ByzConfig, OverlapConfig
 from repro.core import optim
 from repro.core.compressors import get_compressor
 from repro.data import synthetic
@@ -32,7 +32,9 @@ class TrainJob:
     momentum: float = 0.0
     weight_decay: float = 0.0
     optimizer: str = "sgd"  # local per-worker chain: sgd | ef_sgd | adam | ...
-    strategy: str = "dense"  # dense | ef_allgather | ef_alltoall | majority_vote
+    # dense | ef_allgather | ef_ring | ef_alltoall | majority_vote |
+    # ef_coord_median | ef_trimmed_mean | ef_norm_filter
+    strategy: str = "dense"
     compressor: str = "scaled_sign"
     policy: str | None = None
     seed: int = 0
@@ -47,6 +49,9 @@ class TrainJob:
     # async overlap: pipeline per-group compression + collectives with the
     # backward (repro.overlap); None = one aggregator call after full grad
     overlap: OverlapConfig | None = None
+    # Byzantine knobs: fault-injected worker lanes + declared robust
+    # tolerance (repro.comm.adversary / repro.comm.robust); None = honest
+    byz: ByzConfig | None = None
 
 
 def _local_chain(job: TrainJob) -> optim.Transform:
@@ -93,6 +98,7 @@ def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: C
             batch_example=example, state_example=state, microbatches=job.microbatches,
             bucket_size=bucket_size,
             overlap_groups=job.overlap.n_groups if job.overlap else None,
+            byz=job.byz,
         )
         state = jax.device_put(state, bundle.in_shardings[0])
         step_fn = bundle.jit()

@@ -38,8 +38,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm import adversary as comm_adversary
 from repro.comm import bucketize as comm_bucketize
 from repro.comm import collective as comm_collective
+from repro.comm import robust as comm_robust
+from repro.configs.base import ByzConfig
 from repro.core import aggregation, optim
 from repro.core.compressors import Compressor
 from repro.models import layers, transformer
@@ -257,11 +260,18 @@ def make_train_step(
     microbatches: int = 1,
     bucket_size: int | None = None,
     overlap_groups: int | None = None,
+    byz: ByzConfig | None = None,
 ) -> StepBundle:
     if overlap_groups is not None and (strategy == "dense" or bucket_size is None):
         raise ValueError(
             "overlap_groups needs the bucketed EF path (an EF strategy with "
             f"bucket_size set); got strategy={strategy!r}, bucket_size={bucket_size!r}"
+        )
+    if byz is not None and (strategy == "dense" or bucket_size is None):
+        raise ValueError(
+            "byz fault injection / tolerance needs the bucketed EF path (the "
+            "adversary owns lanes of the vmap'd worker axis); got "
+            f"strategy={strategy!r}, bucket_size={bucket_size!r}"
         )
     param_specs = rules.param_specs(state_example.params)
     opt_specs_base = jax.tree.map(
@@ -306,7 +316,7 @@ def make_train_step(
             cfg, mesh, rules, strategy=strategy, comp=comp, local_chain=local_chain,
             ef_axes=ef_axes, batch_example=batch_example, state_example=state_example,
             microbatches=microbatches, bucket_size=bucket_size,
-            overlap_groups=overlap_groups,
+            overlap_groups=overlap_groups, byz=byz,
             param_specs=param_specs, opt_specs_base=opt_specs_base,
             batch_specs=batch_specs,
         )
@@ -398,6 +408,7 @@ def _make_bucketed_ef_step(
     microbatches: int,
     bucket_size: int,
     overlap_groups: int | None = None,
+    byz: ByzConfig | None = None,
     param_specs,
     opt_specs_base,
     batch_specs,
@@ -416,10 +427,15 @@ def _make_bucketed_ef_step(
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
     w = comm_collective.world_size(mesh, ef_axes)
     layout = comm_bucketize.build_layout(state_example.params, bucket_size)
+    byz_f = byz.f if byz is not None else 0
     # a 1-worker world has no collective latency to hide — pipelining would
     # be pure dispatch overhead, so overlap degenerates to the one-shot path
     overlap = overlap_groups is not None and w > 1
     if overlap:
+        # robust strategies are one-shot only (make_overlapped_aggregator
+        # rejects them); a declared tolerance on an overlappable strategy is
+        # rejected here with the same upfront guard as the one-shot path
+        comm_robust.validate_tolerance(strategy, byz_f, w)
         schedule = overlap_schedule.build_schedule(
             layout, state_example.params, n_groups=overlap_groups, comp=comp
         )
@@ -428,8 +444,9 @@ def _make_bucketed_ef_step(
         )
     else:
         agg_fn = comm_collective.make_bucketed_aggregator(
-            strategy, comp, layout, mesh, ef_axes
+            strategy, comp, layout, mesh, ef_axes, byz_f=byz_f
         )
+    attackers = comm_adversary.n_attackers(byz.fraction, w) if byz is not None else 0
 
     auto_dp = tuple(a for a in rules.dp_axes if a not in ef_axes)
     act_ctx = lambda: activation_sharding(auto_dp or None, "model")
@@ -465,6 +482,13 @@ def _make_bucketed_ef_step(
             lambda b: grad_fn(state.params, b)
         )(wb)
         grads_w = lax.with_sharding_constraint(grads_w, grad_shardings)
+        if attackers:
+            # fault injection on the worker lanes; the attack key is folded
+            # off the carried agg key so the honest RNG stream (split below)
+            # is untouched and attackers=0 stays bitwise-identical
+            grads_w = comm_adversary.corrupt_worker_tree(
+                byz, grads_w, jax.random.fold_in(state.agg_state.key, 0x5A1), world=w
+            )
         updates_w, opt_state = jax.vmap(
             lambda g, o: local_chain.update(g, o, state.params)
         )(grads_w, state.opt_state)

@@ -7,6 +7,11 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-device subprocess tests")
     config.addinivalue_line(
         "markers",
+        "byz: Byzantine-robust aggregation + fault-injection coverage "
+        "(selected as its own CI step so robustness regressions are visible)",
+    )
+    config.addinivalue_line(
+        "markers",
         "tpu: needs a real TPU backend (Pallas compile, not interpret mode); "
         "auto-skipped on CPU/GPU so CI on GitHub-hosted runners stays green",
     )

@@ -1,0 +1,449 @@
+"""Byzantine-robust aggregation (repro.comm.robust) and the fault-injection
+layer (repro.comm.adversary): numpy oracles for the order-statistic
+estimators, the byz_f=0 bitwise short-circuit to plain allgather decode,
+tolerance validation at every seam, attack semantics, and the analytic
+wire/decode-cost models.
+
+Multi-worker trajectory equality runs in subprocesses (same isolation pattern
+as tests/test_distributed.py) so the main pytest session keeps one CPU device.
+Property-based coverage lives in tests/test_byzantine_props.py (optional
+hypothesis dependency).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import adversary, bucketize, collective, compressed, robust
+from repro.configs.base import BYZ_ATTACKS, ByzConfig
+from repro.core import aggregation
+from repro.core.compressors import ScaledSignCompressor
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+pytestmark = pytest.mark.byz
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# estimator oracles (numpy)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [3, 4, 5, 8])
+def test_coord_median_matches_numpy(w):
+    rng = np.random.default_rng(w)
+    stack = jnp.asarray(rng.normal(size=(w, 3, 32)).astype(np.float32))
+    got = np.asarray(robust.coord_median(stack))
+    np.testing.assert_allclose(got, np.median(np.asarray(stack), axis=0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("w,f", [(3, 1), (5, 1), (5, 2), (8, 1), (8, 3)])
+def test_trimmed_mean_matches_sorted_slice(w, f):
+    rng = np.random.default_rng(10 * w + f)
+    stack = jnp.asarray(rng.normal(size=(w, 2, 32)).astype(np.float32))
+    got = np.asarray(robust.trimmed_mean(stack, f))
+    want = np.sort(np.asarray(stack), axis=0)[f : w - f].mean(axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_mean_f0_is_mean():
+    rng = np.random.default_rng(0)
+    stack = jnp.asarray(rng.normal(size=(4, 2, 32)).astype(np.float32))
+    # allclose, not bitwise: the sorted reduction reassociates the sum
+    np.testing.assert_allclose(
+        np.asarray(robust.trimmed_mean(stack, 0)),
+        np.asarray(stack).mean(axis=0),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_norm_filtered_mean_drops_far_worker():
+    rng = np.random.default_rng(1)
+    honest = rng.normal(size=(5, 2, 32)).astype(np.float32)
+    stack = np.concatenate([honest, 100.0 + np.zeros((1, 2, 32), np.float32)])
+    got = np.asarray(robust.norm_filtered_mean(jnp.asarray(stack), 1))
+    np.testing.assert_allclose(got, honest.mean(axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_norm_filtered_mean_catches_sign_flip():
+    # a sign-flipped worker is norm-preserving; the distance-to-median
+    # criterion still isolates it where a pure-norm filter could not
+    rng = np.random.default_rng(2)
+    base = rng.normal(size=(2, 32)).astype(np.float32)
+    honest = base[None] + 0.01 * rng.normal(size=(7, 2, 32)).astype(np.float32)
+    stack = np.concatenate([honest, -base[None]])
+    got = np.asarray(robust.norm_filtered_mean(jnp.asarray(stack), 1))
+    np.testing.assert_allclose(got, honest.mean(axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_max_tolerance():
+    assert [robust.max_tolerance(w) for w in (1, 2, 3, 4, 5, 8)] == [0, 0, 1, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# robust_combine: the decode seam
+# ---------------------------------------------------------------------------
+
+
+def _gathered_payloads(w, nb=3, bs=64, seed=0):
+    rng = np.random.default_rng(seed)
+    comp = ScaledSignCompressor()
+    enc = jax.vmap(lambda b, e: compressed.ef_encode_buckets(comp, b, e))
+    b_w = jnp.asarray(rng.normal(size=(w, nb, bs)).astype(np.float32))
+    e_w = jnp.asarray(rng.normal(size=(w, nb, bs)).astype(np.float32) * 0.1)
+    payload_w, _, _ = enc(b_w, e_w)
+    return comp, compressed.BucketPayload(data=payload_w.data), bs
+
+
+@pytest.mark.parametrize("strategy", robust.ROBUST_STRATEGIES)
+def test_robust_combine_f0_bitwise_equals_mean_decode(strategy):
+    comp, gathered, bs = _gathered_payloads(4)
+    mean = compressed.decode_mean_buckets(comp, gathered, bs)
+    got = robust.robust_combine(strategy, comp, gathered, bs, byz_f=0)
+    assert np.array_equal(np.asarray(got), np.asarray(mean)), (
+        "byz_f=0 must short-circuit to the literal allgather decode"
+    )
+
+
+def test_robust_combine_estimators_match_decoded_stack():
+    comp, gathered, bs = _gathered_payloads(5)
+    stack = np.asarray(compressed.decode_buckets_stack(comp, gathered, bs))
+    np.testing.assert_allclose(
+        np.asarray(robust.robust_combine("ef_coord_median", comp, gathered, bs, byz_f=1)),
+        np.median(stack, axis=0),
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(robust.robust_combine("ef_trimmed_mean", comp, gathered, bs, byz_f=2)),
+        np.sort(stack, axis=0)[2:3].mean(axis=0),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_robust_combine_rejects_unknown_strategy():
+    comp, gathered, bs = _gathered_payloads(4)
+    with pytest.raises(ValueError):
+        robust.robust_combine("ef_mystery", comp, gathered, bs, byz_f=1)
+
+
+def test_decode_buckets_stack_rows_match_single_decode():
+    comp, gathered, bs = _gathered_payloads(3)
+    stack = compressed.decode_buckets_stack(comp, gathered, bs)
+    for i in range(3):
+        row = compressed.BucketPayload(data=jax.tree.map(lambda x: x[i], gathered.data))
+        np.testing.assert_array_equal(
+            np.asarray(stack[i]),
+            np.asarray(compressed.decode_buckets(comp, row, bs)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# tolerance validation at every seam
+# ---------------------------------------------------------------------------
+
+
+def test_validate_tolerance_breakdown_point():
+    robust.validate_tolerance("ef_coord_median", 1, 4)  # 2f < W: fine
+    robust.validate_tolerance("ef_allgather", 0, 2)
+    with pytest.raises(ValueError, match="0 <= byz_f <= 1"):
+        robust.validate_tolerance("ef_coord_median", 2, 4)
+    with pytest.raises(ValueError, match="0 <= byz_f <= 0"):
+        robust.validate_tolerance("ef_trimmed_mean", 1, 2)
+    with pytest.raises(ValueError):
+        robust.validate_tolerance("ef_norm_filter", -1, 8)
+    with pytest.raises(ValueError, match="robust"):
+        robust.validate_tolerance("ef_allgather", 1, 8)
+
+
+def test_make_bucketed_aggregator_rejects_breakdown():
+    mesh = make_host_mesh(data=1, model=1)
+    layout = bucketize.build_layout({"x": jnp.zeros((256,), jnp.float32)}, 128)
+    with use_mesh(mesh):
+        with pytest.raises(ValueError, match="0 <= byz_f <= 0"):
+            collective.make_bucketed_aggregator(
+                "ef_coord_median", ScaledSignCompressor(), layout, mesh, ("data",), byz_f=1
+            )
+
+
+def test_robust_strategies_rejected_on_per_leaf_path():
+    with pytest.raises(ValueError, match="bucketed-only"):
+        aggregation.init_agg_state(
+            "ef_coord_median", {"x": jnp.zeros(8)}, world=4, bucket_size=None
+        )
+
+
+def test_train_step_rejects_byz_without_buckets():
+    from repro.train import steps as ST
+
+    with pytest.raises(ValueError, match="bucketed"):
+        ST.make_train_step(
+            None,
+            None,
+            None,
+            strategy="dense",
+            comp=None,
+            local_chain=None,
+            ef_axes=(),
+            batch_example=None,
+            state_example=None,
+            bucket_size=None,
+            byz=ByzConfig(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# ByzConfig
+# ---------------------------------------------------------------------------
+
+
+def test_byz_config_validation():
+    with pytest.raises(ValueError):
+        ByzConfig(attack="meteor_strike")
+    with pytest.raises(ValueError):
+        ByzConfig(fraction=1.0)
+    with pytest.raises(ValueError):
+        ByzConfig(fraction=-0.1)
+    with pytest.raises(ValueError):
+        ByzConfig(f=-1)
+    assert ByzConfig(attack="zero_out", fraction=0.25).attack in BYZ_ATTACKS
+
+
+def test_byz_config_from_args():
+    assert ByzConfig.from_args(None, None, None) is None
+    c = ByzConfig.from_args("sign_flip", None, None)
+    assert c.attack == "sign_flip" and c.fraction == 0.0 and c.f == 0
+    c = ByzConfig.from_args(None, 0.25, 1, 3.0)
+    assert c.fraction == 0.25 and c.f == 1 and c.scale == 3.0
+    assert ByzConfig.from_args(None, None, 2).f == 2
+
+
+# ---------------------------------------------------------------------------
+# adversary: fault injection semantics
+# ---------------------------------------------------------------------------
+
+
+def _tree_w(w=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(w, 7)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(w, 3, 5)).astype(np.float32)),
+    }
+
+
+def test_n_attackers_floor():
+    assert adversary.n_attackers(0.0, 8) == 0
+    assert adversary.n_attackers(1 / 8, 8) == 1
+    assert adversary.n_attackers(0.24, 8) == 1
+    assert adversary.n_attackers(0.25, 8) == 2
+    assert adversary.n_attackers(0.49, 2) == 0
+
+
+def test_zero_attackers_is_identity_object():
+    tree = _tree_w()
+    byz = ByzConfig(attack="sign_flip", fraction=0.1)  # floor(0.4) = 0
+    out = adversary.corrupt_worker_tree(byz, tree, jax.random.PRNGKey(0), world=4)
+    assert out is tree, "0 attackers must be a python-level no-op"
+
+
+@pytest.mark.parametrize("attack", BYZ_ATTACKS)
+def test_honest_lanes_bitwise_untouched(attack):
+    tree = _tree_w()
+    byz = ByzConfig(attack=attack, fraction=0.5)  # lanes 0,1 of 4
+    out = adversary.corrupt_worker_tree(byz, tree, jax.random.PRNGKey(0), world=4)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k][2:]), np.asarray(tree[k][2:]))
+
+
+def test_attack_semantics():
+    tree = _tree_w()
+    key = jax.random.PRNGKey(0)
+    flip = adversary.corrupt_worker_tree(
+        ByzConfig(attack="sign_flip", fraction=0.5), tree, key, world=4
+    )
+    np.testing.assert_array_equal(np.asarray(flip["a"][:2]), -np.asarray(tree["a"][:2]))
+    zero = adversary.corrupt_worker_tree(
+        ByzConfig(attack="zero_out", fraction=0.5), tree, key, world=4
+    )
+    assert not np.any(np.asarray(zero["b"][:2]))
+    drift = adversary.corrupt_worker_tree(
+        ByzConfig(attack="const_drift", fraction=0.5, scale=3.5), tree, key, world=4
+    )
+    np.testing.assert_array_equal(np.asarray(drift["a"][:2]), np.full((2, 7), 3.5))
+    # colluding: every adversarial lane submits the identical vector
+    np.testing.assert_array_equal(np.asarray(drift["b"][0]), np.asarray(drift["b"][1]))
+    noise = adversary.corrupt_worker_tree(
+        ByzConfig(attack="scaled_noise", fraction=0.5, scale=10.0), tree, key, world=4
+    )
+    assert float(np.abs(np.asarray(noise["a"][:2])).mean()) > 2.0
+    assert not np.array_equal(np.asarray(noise["a"][0]), np.asarray(noise["a"][1]))
+
+
+# ---------------------------------------------------------------------------
+# in-process aggregator: robust strategies on the W=1 collective path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", robust.ROBUST_STRATEGIES)
+def test_bucketed_aggregator_robust_single_device(strategy):
+    mesh = make_host_mesh(data=1, model=1)
+    tree = {"x": jnp.linspace(-1, 1, 300, dtype=jnp.float32)}
+    layout = bucketize.build_layout(tree, 128)
+    comp = ScaledSignCompressor()
+    buckets_w = tuple(b[None] for b in bucketize.flatten_buckets(layout, tree))
+    err = tuple(jnp.ones_like(b) * 0.1 for b in buckets_w)
+    key = jax.random.PRNGKey(0)
+    with use_mesh(mesh):
+        ag = jax.jit(
+            collective.make_bucketed_aggregator("ef_allgather", comp, layout, mesh, ("data",))
+        )
+        rb = jax.jit(collective.make_bucketed_aggregator(strategy, comp, layout, mesh, ("data",)))
+        o1, o2 = ag(buckets_w, err, (), key), rb(buckets_w, err, (), key)
+    # W=1, byz_f=0: identical payloads, identical decode → bitwise equal,
+    # and the robust strategies bill exactly the allgather wire bytes
+    for a, b in zip(o1[0] + o1[1], o2[0] + o2[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(o1[3].wire_bytes_per_device) == float(o2[3].wire_bytes_per_device)
+
+
+# ---------------------------------------------------------------------------
+# analytic models
+# ---------------------------------------------------------------------------
+
+
+def test_robust_wire_model_equals_allgather():
+    for w in (1, 2, 8, 16):
+        assert aggregation.bucketed_sign_robust_wire_bytes(
+            12, 1024, w
+        ) == aggregation.bucketed_sign_allgather_wire_bytes(12, 1024, w)
+
+
+def test_robust_decode_cost_model():
+    d = 4 * 256
+    m = aggregation.robust_decode_cost_model(4, 256, 8, byz_f=1, kind="ef_coord_median")
+    assert m["stack_hbm_bytes"] == 4.0 * 8 * d
+    assert m["sort_flops"] == d * 8 * 3  # log2(8) = 3
+    assert m["reduce_flops"] == d
+    assert m["total_flops"] == m["sort_flops"] + m["reduce_flops"]
+    tm = aggregation.robust_decode_cost_model(4, 256, 8, byz_f=2, kind="ef_trimmed_mean")
+    assert tm["reduce_flops"] == d * (8 - 4)
+    assert aggregation.robust_decode_cost_model(4, 256, 1)["sort_flops"] == 0
+    with pytest.raises(ValueError):
+        aggregation.robust_decode_cost_model(4, 256, 8, kind="ef_mystery")
+
+
+# ---------------------------------------------------------------------------
+# multi-worker subprocesses
+# ---------------------------------------------------------------------------
+
+_TRAJ_DRIVER = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(%(repo)r, "src"))
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced
+from repro.core import optim
+from repro.core.compressors import ScaledSignCompressor
+from repro.launch.mesh import make_host_mesh, ef_axis_names, use_mesh
+from repro.sharding.rules import ShardingRules
+from repro.train.state import init_train_state
+from repro.train import steps as ST
+
+W = %(world)d
+cfg = reduced(get_config("llama3_2_1b"))
+mesh = make_host_mesh(data=W, model=1)
+key = jax.random.PRNGKey(0)
+rules = ShardingRules(cfg, mesh, "tp")
+ef_axes = ef_axis_names(mesh, "tp")
+chain = optim.sgd(0.02)
+
+def run(strategy):
+    with use_mesh(mesh):
+        state = init_train_state(cfg, key, chain, strategy, mesh, ef_axes, bucket_size=4096)
+        batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}
+        bundle = ST.make_train_step(cfg, mesh, rules, strategy=strategy,
+            comp=ScaledSignCompressor(), local_chain=chain, ef_axes=ef_axes,
+            batch_example=batch, state_example=state, bucket_size=4096)
+        state = jax.device_put(state, bundle.in_shardings[0])
+        batch = jax.device_put(batch, bundle.in_shardings[1])
+        fn = bundle.jit()
+        traj = []
+        for _ in range(5):
+            state, (loss, m) = fn(state, batch)
+            traj.append(float(loss))
+        return traj, jax.device_get(jax.tree.leaves(state.params)), float(m["wire_bytes"])
+
+t0, p0, w0 = run("ef_allgather")
+out = {"traj": t0, "robust": {}}
+for s in ("ef_coord_median", "ef_trimmed_mean", "ef_norm_filter"):
+    t, p, w = run(s)
+    out["robust"][s] = {
+        "traj_equal": t == t0,
+        "params_equal": all(np.array_equal(a, b) for a, b in zip(p, p0)),
+        "wire_equal": w == w0,
+    }
+print(json.dumps(out))
+"""
+
+_ATTACK_DRIVER = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(%(repo)r, "src"))
+import jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.configs.base import ByzConfig
+from repro.launch.mesh import make_host_mesh
+from repro.train.loop import TrainJob, run_training
+
+cfg = reduced(get_config("llama3_2_1b"))
+mesh = make_host_mesh(data=4, model=1)
+byz = ByzConfig(attack="sign_flip", fraction=0.25, f=1)
+job = TrainJob(cfg=cfg, mesh=mesh, steps=8, batch=8, seq=32, lr=0.02,
+               optimizer="ef_signsgd", strategy="ef_trimmed_mean",
+               bucket_size=4096, byz=byz, log_every=1)
+_, hist = run_training(job)
+print(json.dumps({"losses": [h["loss"] for h in hist]}))
+"""
+
+
+def _run_driver(code_tmpl, **kw):
+    code = code_tmpl % {"repo": REPO, **kw}
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("world", [2, 4])
+def test_robust_strategies_bitwise_at_zero_attackers(world):
+    """The ISSUE acceptance gate: with attackers=0 and byz_f=0 every robust
+    strategy reproduces ef_allgather's 5-step trajectory bitwise."""
+    out = _run_driver(_TRAJ_DRIVER, world=world)
+    for s, r in out["robust"].items():
+        assert r["traj_equal"], f"W={world} {s}: losses diverged from {out['traj']}"
+        assert r["params_equal"], f"W={world} {s}: params diverged"
+        assert r["wire_equal"], f"W={world} {s}: wire bill must match allgather"
+
+
+@pytest.mark.slow
+def test_attacked_robust_run_still_trains():
+    out = _run_driver(_ATTACK_DRIVER)
+    losses = out["losses"]
+    assert losses[-1] < losses[0], losses

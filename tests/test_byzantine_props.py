@@ -1,0 +1,72 @@
+"""Property-based contracts for the robust estimators (repro.comm.robust).
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the whole
+module skips cleanly when it is absent so tier-1 collection never fails — the
+deterministic oracles in tests/test_byzantine.py still run.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+
+from repro.comm import robust
+
+pytestmark = pytest.mark.byz
+
+STACKS = st.integers(min_value=3, max_value=9).flatmap(
+    lambda w: hnp.arrays(
+        np.float32,
+        st.tuples(st.just(w), st.integers(1, 4), st.integers(1, 16)),
+        # no subnormals: XLA flushes denormals to zero
+        elements=st.floats(-1e3, 1e3, width=32, allow_nan=False, allow_subnormal=False),
+    )
+)
+
+
+@hypothesis.given(STACKS, st.randoms(use_true_random=False))
+def test_estimators_permutation_invariant(stack, rng):
+    w = stack.shape[0]
+    perm = list(range(w))
+    rng.shuffle(perm)
+    shuffled = stack[perm]
+    f = robust.max_tolerance(w)
+    for name, fn in (
+        ("coord_median", robust.coord_median),
+        ("trimmed_mean", lambda s: robust.trimmed_mean(s, f)),
+    ):
+        a = np.asarray(fn(jnp.asarray(stack)))
+        b = np.asarray(fn(jnp.asarray(shuffled)))
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+@hypothesis.given(STACKS)
+def test_trimmed_mean_f0_agrees_with_mean(stack):
+    # allclose, NOT bitwise: the sorted reduction reassociates the sum
+    got = np.asarray(robust.trimmed_mean(jnp.asarray(stack), 0))
+    np.testing.assert_allclose(got, stack.mean(axis=0), rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.given(
+    STACKS,
+    hnp.arrays(
+        np.float32,
+        st.just(()),
+        elements=st.floats(-1e6, 1e6, width=32, allow_nan=False, allow_subnormal=False),
+    ),
+)
+def test_estimates_bounded_by_honest_range_under_one_adversary(stack, evil):
+    """With one arbitrary adversarial row and f=1, both estimators stay
+    inside [min, max] of the honest rows per coordinate (2f < W holds for
+    every generated W >= 3)."""
+    adversarial = np.concatenate([stack, np.full((1,) + stack.shape[1:], evil)])
+    lo, hi = stack.min(axis=0), stack.max(axis=0)
+    for fn in (
+        robust.coord_median,
+        lambda s: robust.trimmed_mean(s, 1),
+    ):
+        est = np.asarray(fn(jnp.asarray(adversarial)))
+        assert np.all(est >= lo - 1e-4) and np.all(est <= hi + 1e-4)

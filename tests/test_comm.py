@@ -163,13 +163,9 @@ def test_bucket_kernels_interpret_match_ref():
     e = jnp.asarray(rng.normal(size=(3, 4096)).astype(np.float32) * 0.1)
     w_ref, s_ref, e_ref, d_ref = ops.ef_sign_bucket_step(g, e, force="ref")
     # the fused stats pass reproduces the standalone density definition
-    np.testing.assert_allclose(
-        np.asarray(d_ref), np.asarray(jax.vmap(C.density)(g + e)), rtol=1e-6
-    )
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(jax.vmap(C.density)(g + e)), rtol=1e-6)
     l1_pl, l2_pl = ef_sign.bucket_stats(g, e, interpret=True)
-    np.testing.assert_allclose(
-        np.asarray(l1_pl), np.asarray(ref.bucket_l1_ref(g, e)), rtol=1e-6
-    )
+    np.testing.assert_allclose(np.asarray(l1_pl), np.asarray(ref.bucket_l1_ref(g, e)), rtol=1e-6)
     np.testing.assert_allclose(
         np.asarray(l2_pl), np.asarray(jnp.sum((g + e) ** 2, axis=-1)), rtol=1e-6
     )

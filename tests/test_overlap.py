@@ -138,9 +138,7 @@ def test_fused_density_matches_definition():
     g = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32))
     e = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32) * 0.1)
     _, _, _, dens = ops.ef_sign_bucket_step(g, e, force="ref")
-    np.testing.assert_allclose(
-        np.asarray(dens), np.asarray(jax.vmap(density)(g + e)), rtol=1e-6
-    )
+    np.testing.assert_allclose(np.asarray(dens), np.asarray(jax.vmap(density)(g + e)), rtol=1e-6)
     # all-zero bucket (pure padding): density defined as 1.0
     z = jnp.zeros((1, 128), jnp.float32)
     assert float(ops.ef_sign_bucket_step(z, z, force="ref")[3][0]) == 1.0
@@ -204,9 +202,17 @@ def test_train_step_rejects_overlap_without_buckets():
 
     with pytest.raises(ValueError, match="overlap_groups"):
         ST.make_train_step(
-            None, None, None, strategy="dense", comp=None, local_chain=None,
-            ef_axes=(), batch_example=None, state_example=None,
-            bucket_size=None, overlap_groups=4,
+            None,
+            None,
+            None,
+            strategy="dense",
+            comp=None,
+            local_chain=None,
+            ef_axes=(),
+            batch_example=None,
+            state_example=None,
+            bucket_size=None,
+            overlap_groups=4,
         )
 
 
@@ -332,7 +338,10 @@ print(json.dumps({"bitwise": bool(bitwise), "wire_equal": w1 == w2,
 def _run_driver(code_tmpl, **kw):
     code = code_tmpl % {"repo": REPO, **kw}
     proc = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=900,
         env={**os.environ, "JAX_PLATFORMS": "cpu"},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
