@@ -45,8 +45,13 @@ def main():
                     help="fraction of workers the injector corrupts")
     ap.add_argument("--byz-f", type=int, default=None,
                     help="declared tolerance for the robust strategies (2f < W)")
+    ap.add_argument("--backend", default="auto",
+                    help="collective backend for the payload-mean exchange "
+                    "(auto | xla | ring | pallas_dma; pallas_dma falls back "
+                    "to ring off-TPU with a logged reason)")
     args = ap.parse_args()
 
+    from repro.comm import CommSpec
     from repro.configs import get_config
     from repro.configs.base import ByzConfig, OverlapConfig
     from repro.launch.mesh import make_host_mesh
@@ -65,10 +70,16 @@ def main():
     mesh = make_host_mesh(data=4, model=2)
     overlap = OverlapConfig.from_args(args.overlap, args.overlap_groups)
     byz = ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f)
+    # one spec describes the whole gradient exchange: strategy, compressor,
+    # bucketing, collective backend, and the overlap/byz riders
+    spec = CommSpec(
+        strategy=args.strategy, compressor="scaled_sign",
+        backend=args.backend, overlap=overlap, byz=byz,
+    ).validate()
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
-        lr=0.01, optimizer="sgd", strategy=args.strategy, policy="tp",
-        log_every=20, overlap=overlap, byz=byz,
+        lr=0.01, optimizer="sgd", policy="tp",
+        log_every=20, comm=spec,
     )
 
     # --overlap: report per step how much of the serial comm bill the

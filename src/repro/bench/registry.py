@@ -13,7 +13,8 @@ import dataclasses
 from typing import Callable
 
 KNOWN_SUITES = (
-    "kernels", "aggregation", "comm", "overlap", "byz", "convergence", "serve", "roofline", "smoke",
+    "kernels", "aggregation", "comm", "backends", "overlap", "byz", "convergence", "serve",
+    "roofline", "smoke",
 )
 
 

@@ -3,6 +3,7 @@
 
 from repro.bench.suites import (  # noqa: F401
     aggregation,
+    backends,
     byz,
     comm,
     convergence,

@@ -1,0 +1,217 @@
+"""Collective-backend suite: the pluggable transports head-to-head.
+
+Three families of metrics, one committed baseline (``BENCH_backends.json``):
+
+* ``backends_resolution_facts`` — deterministic registry behavior: what
+  ``backend="auto"`` resolves to per strategy, and that an explicit
+  ``pallas_dma`` off-TPU degrades to ``ring`` (the CI leg runs on CPU, so
+  the fallback IS the pinned fact).
+* ``backends_dma_model`` — the analytic DMA-hop latency model
+  (:func:`repro.core.aggregation.dma_ring_latency_model`) at W ∈ {2, 4, 8}:
+  per-hop cost, ring-vs-allgather totals, and the accept/reject verdict the
+  ``auto`` promotion consults. Pure arithmetic → exact gate.
+* ``backends_exchange_latency`` — measured: the same payload-mean exchange
+  through every backend at W ∈ {2, 4, 8} on subprocess fake-device meshes,
+  with a bitwise cross-backend equality bit per world size (the replicated
+  out_specs contract) pinned alongside the wall clocks.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from repro.bench.artifact import Metric
+from repro.bench.measure import bytes_metric, wall_metric
+from repro.bench.registry import SkipBench, register_bench
+from repro.core import aggregation
+
+BUCKET_SIZE = 1 << 12  # 4096 elems — same granularity as the overlap suite
+WORLDS = (2, 4, 8)
+
+
+def _t(d: dict) -> dict:
+    return {"median_us": d["median"], "min_us": d["min"], "mean_us": d["median"]}
+
+
+@register_bench("backends_resolution_facts", suites=("backends", "smoke"))
+def backends_resolution_facts(ctx):
+    """Registry resolution pinned as data: auto defaults per strategy and the
+    off-TPU ``pallas_dma`` → ``ring`` fallback."""
+    from repro.comm import api, backends
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=1, model=1)
+    metrics = [
+        Metric(
+            name="backends_registry_size", value=float(len(backends.BACKENDS)),
+            metric="registry", unit="count",
+            config={"names": sorted(backends.BACKENDS)},
+            direction="match", tolerance=0.0,
+        )
+    ]
+    for strategy, expect in (
+        ("ef_ring", "ring"),
+        ("ef_allgather", "xla"),  # CPU mesh: no pallas_dma promotion
+        ("ef_coord_median", "xla"),
+        ("dense", "xla"),
+    ):
+        spec = api.CommSpec(strategy=strategy, bucket_size=BUCKET_SIZE)
+        got = backends.resolve(spec, mesh, ("data",)).name
+        metrics.append(
+            Metric(
+                name=f"backends_auto_{strategy}",
+                value=float(got == expect),
+                metric="resolution", unit="bool",
+                config={"strategy": strategy, "expect": expect, "got": got},
+                direction="match", tolerance=0.0,
+            )
+        )
+    # explicit pallas_dma off-TPU must degrade to the ppermute ring
+    spec = api.CommSpec(strategy="ef_allgather", bucket_size=BUCKET_SIZE, backend="pallas_dma")
+    got = backends.resolve(spec, mesh, ("data",)).name
+    expect = "pallas_dma" if jax.default_backend() == "tpu" else "ring"
+    metrics.append(
+        Metric(
+            name="backends_pallas_dma_fallback",
+            value=float(got == expect),
+            metric="resolution", unit="bool",
+            config={"jax_backend": jax.default_backend(), "expect": expect, "got": got},
+            direction="match", tolerance=0.0,
+        )
+    )
+    return metrics
+
+
+@register_bench("backends_dma_model", suites=("backends", "smoke"))
+def backends_dma_model(ctx):
+    """The accept/reject oracle, gated exactly: DMA-ring vs one-shot
+    all-gather latency at the suite's world sizes (same bytes, different
+    launch structure)."""
+    nb = 64
+    metrics = []
+    for world in WORLDS + (16,):
+        m = aggregation.dma_ring_latency_model(nb, BUCKET_SIZE, world)
+        cfg_d = {"world": world, "n_buckets": nb, "bucket_size": BUCKET_SIZE,
+                 "bytes_per_us": aggregation.REF_WIRE_BYTES_PER_US}
+        metrics.append(
+            bytes_metric(f"backends_dma_per_hop_bytes_w{world}", m["per_hop_bytes"], config=cfg_d)
+        )
+        metrics.append(
+            Metric(
+                name=f"backends_dma_total_us_w{world}", value=round(m["dma_total_us"], 3),
+                metric="model", unit="us", config=cfg_d, direction="match", tolerance=0.01,
+            )
+        )
+        metrics.append(
+            Metric(
+                name=f"backends_allgather_us_w{world}", value=round(m["allgather_us"], 3),
+                metric="model", unit="us", config=cfg_d, direction="match", tolerance=0.01,
+            )
+        )
+        metrics.append(
+            Metric(
+                name=f"backends_dma_accept_w{world}", value=float(m["accept"]),
+                metric="model", unit="bool", config=cfg_d, direction="match", tolerance=0.0,
+            )
+        )
+    return metrics
+
+
+_DRIVER = r"""
+import os, json, time, statistics
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(world)d"
+import sys
+sys.path.insert(0, %(src)r)
+import warnings
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.comm import CommSpec, make_aggregator, bucketize
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+BUCKET, ITERS, WORLD = %(bucket)d, %(iters)d, %(world)d
+NB = 64
+mesh = make_host_mesh(data=WORLD, model=1)
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (NB * BUCKET,), jnp.float32)}
+layout = bucketize.build_layout(params, BUCKET)
+buckets_w = tuple(
+    jax.device_put(
+        jax.random.normal(jax.random.fold_in(key, gi), (WORLD, g.n_buckets, BUCKET)),
+        NamedSharding(mesh, P("data")))
+    for gi, g in enumerate(layout.groups))
+err_w = tuple(jnp.zeros_like(b) for b in buckets_w)
+
+def timeit(fn, *a):
+    for _ in range(2):
+        jax.block_until_ready(fn(*a))
+    xs = []
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        xs.append((time.perf_counter() - t0) * 1e6)
+    return {"median": statistics.median(xs), "min": min(xs)}
+
+out = {"timings": {}, "bitwise_equal": True}
+ref = None
+with use_mesh(mesh):
+    for backend in ("xla", "ring", "pallas_dma"):
+        spec = CommSpec(strategy="ef_allgather", bucket_size=BUCKET, backend=backend)
+        agg = jax.jit(make_aggregator(spec, layout, mesh, ("data",)))
+        res = agg(buckets_w, err_w, (), key)
+        got = np.asarray(res[0][0])
+        if ref is None:
+            ref = got
+        elif not np.array_equal(ref, got):
+            out["bitwise_equal"] = False
+        out["timings"][backend] = timeit(lambda: agg(buckets_w, err_w, (), key))
+print(json.dumps(out))
+"""
+
+
+@register_bench("backends_exchange_latency", suites=("backends",))
+def backends_exchange_latency(ctx):
+    """Measured payload-mean exchange per backend at W ∈ {2, 4, 8}
+    (subprocess fake-device meshes), plus the bitwise cross-backend equality
+    bit the replicated out_specs contract rests on. Off-TPU the
+    ``pallas_dma`` column measures its documented ring fallback."""
+    if jax.default_backend() != "cpu":
+        raise SkipBench("subprocess driver assumes CPU fake devices")
+    repo_src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    metrics = []
+    for world in WORLDS:
+        code = _DRIVER % {
+            "src": repo_src, "bucket": BUCKET_SIZE, "world": world,
+            "iters": 3 if ctx.fast else 10,
+        }
+        proc = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True, timeout=1200,
+            env={**os.environ, "JAX_PLATFORMS": "cpu"},
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(f"backends driver (W={world}) failed: {proc.stderr[-2000:]}")
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        cfg_d = {"world": world, "n_buckets": 64, "bucket_size": BUCKET_SIZE,
+                 "strategy": "ef_allgather"}
+        for backend, t in out["timings"].items():
+            metrics.append(
+                wall_metric(
+                    f"backends_exchange_{backend}_w{world}", {**_t(t), "iters": 0},
+                    config=dict(cfg_d, backend=backend),
+                )
+            )
+        metrics.append(
+            Metric(
+                name=f"backends_bitwise_equal_w{world}",
+                value=float(out["bitwise_equal"]),
+                metric="parity", unit="bool", config=cfg_d,
+                direction="match", tolerance=0.0,
+            )
+        )
+    return metrics

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.bench.artifact import Metric
 from repro.bench.measure import bytes_metric, time_fn, wall_metric
 from repro.bench.registry import register_bench
+from repro.comm import api as comm_api
 from repro.comm import bucketize, collective, compressed
 from repro.core import aggregation
 from repro.core.compressors import ScaledSignCompressor, get_compressor
@@ -135,9 +136,8 @@ def comm_step_wire_accounting(ctx):
                 if strategy == "ef_alltoall"
                 else ()
             )
-            agg = collective.make_bucketed_aggregator(
-                strategy, comp, layout, mesh, ("data",)
-            )
+            spec = comm_api.CommSpec(strategy=strategy, compressor=comp, bucket_size=bs)
+            agg = comm_api.make_aggregator(spec, layout, mesh, ("data",))
             fn = jax.jit(lambda b, e, s, k, _agg=agg: _agg(b, e, s, k))
             out = fn(buckets, err, srv, key)
             jax.block_until_ready(out)

@@ -34,7 +34,8 @@ from repro.core import aggregation
 BUCKET_SIZE = 1 << 12  # 4096 elems — many buckets/groups on the reduced model
 WORLD = 4
 GROUPS = (2, 4)
-REF_WIRE_BYTES_PER_US = 1250.0  # 10 Gb/s inter-pod reference wire
+# 10 Gb/s inter-pod reference wire, shared with the analytic latency models
+REF_WIRE_BYTES_PER_US = aggregation.REF_WIRE_BYTES_PER_US
 
 
 def _layout_and_schedule(arch: str, n_groups: int):
@@ -148,8 +149,8 @@ from repro.launch.mesh import make_host_mesh, ef_axis_names, use_mesh
 from repro.sharding.rules import ShardingRules
 from repro.train.state import init_train_state
 from repro.train import steps as ST
-from repro.comm import collective
-from repro.overlap import build_schedule, make_overlapped_aggregator
+from repro.comm import CommSpec, make_aggregator
+from repro.overlap import build_schedule
 
 BUCKET, ITERS, WORLD = %(bucket)d, %(iters)d, %(world)d
 cfg = reduced(get_config("llama3_2_1b"))
@@ -176,9 +177,12 @@ out = {}
 with use_mesh(mesh):
     state0 = init_train_state(cfg, key, chain, "ef_allgather", mesh, ef_axes, bucket_size=BUCKET)
     def step_time(groups):
-        bundle = ST.make_train_step(cfg, mesh, rules, strategy="ef_allgather",
-            comp=comp, local_chain=chain, ef_axes=ef_axes, batch_example=batch,
-            state_example=state0, bucket_size=BUCKET, overlap_groups=groups)
+        from repro.configs.base import OverlapConfig
+        spec = CommSpec(strategy="ef_allgather", compressor=comp, bucket_size=BUCKET,
+            overlap=None if groups is None else OverlapConfig(n_groups=groups))
+        bundle = ST.make_train_step(cfg, mesh, rules, spec=spec,
+            local_chain=chain, ef_axes=ef_axes, batch_example=batch,
+            state_example=state0)
         state = jax.device_put(state0, bundle.in_shardings[0])
         b = jax.device_put(batch, bundle.in_shardings[1])
         # no donation: the timed loop reuses the same state buffers
@@ -193,7 +197,8 @@ with use_mesh(mesh):
     # bill the pipeline tries to hide
     from repro.comm import bucketize
     layout = bucketize.build_layout(state0.params, BUCKET)
-    agg = collective.make_bucketed_aggregator("ef_allgather", comp, layout, mesh, ef_axes)
+    agg = make_aggregator(CommSpec(strategy="ef_allgather", compressor=comp,
+                                   bucket_size=BUCKET), layout, mesh, ef_axes)
     rng = jax.random.PRNGKey(2)
     from jax.sharding import NamedSharding, PartitionSpec as P
     buckets_w = tuple(
@@ -203,7 +208,8 @@ with use_mesh(mesh):
     err_w = tuple(jnp.zeros_like(b) for b in buckets_w)
     jagg = jax.jit(agg)
     out["serial_comm"] = timeit(lambda: jagg(buckets_w, err_w, (), key))
-    ring = jax.jit(collective.make_bucketed_aggregator("ef_ring", comp, layout, mesh, ef_axes))
+    ring = jax.jit(make_aggregator(CommSpec(strategy="ef_ring", compressor=comp,
+                                            bucket_size=BUCKET), layout, mesh, ef_axes))
     out["ring_comm"] = timeit(lambda: ring(buckets_w, err_w, (), key))
     sched = build_schedule(layout, state0.params, n_groups=max(%(groups)r))
     out["group_bytes"] = [g.wire_bytes for g in sched.groups]

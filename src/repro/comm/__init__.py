@@ -6,6 +6,10 @@ run compression + collectives per bucket (dist-EF-SGD, Zheng et al. '19;
 PyTorch DDP's gradient bucketing). This package supplies that wire path for
 every :class:`repro.core.compressors.Compressor`:
 
+``api``
+    :class:`CommSpec` + :func:`make_aggregator` — THE public entry point: one
+    frozen spec describing strategy / compressor / bucket size / collective
+    backend / byz / overlap, validated once, dispatched to the right path.
 ``bucketize``
     :class:`BucketLayout` — a static flatten/unflatten plan computed once per
     parameter spec — plus the flatten/unflatten executors.
@@ -13,10 +17,19 @@ every :class:`repro.core.compressors.Compressor`:
     Per-bucket compression with error feedback: encode ``p_b = u_b + e_b``,
     decode-and-average gathered payloads, per-bucket wire/density accounting.
 ``collective``
-    The mesh collectives, run under **fully-manual** ``shard_map`` over every
-    mesh axis so jax 0.4.37's partial-manual ``IsManualSubgroup`` abort is
-    never reachable (collectives over a manual subgroup while other axes stay
-    auto is exactly the broken configuration; see tests/test_distributed.py).
+    The strategy semantics, run under **fully-manual** ``shard_map`` over
+    every mesh axis so jax 0.4.37's partial-manual ``IsManualSubgroup`` abort
+    is never reachable (collectives over a manual subgroup while other axes
+    stay auto is exactly the broken configuration; see
+    tests/test_distributed.py).
+``backends``
+    Pluggable transports for the payload-mean exchange — ``xla`` (lax
+    collectives), ``ring`` (double-buffered ppermute), ``pallas_dma``
+    (in-kernel remote-DMA ring) — selected per mesh via
+    ``CommSpec.backend`` / ``backends.resolve``.
+``errors``
+    The one :class:`~repro.comm.errors.CommSpecError` taxonomy every
+    construction-time rejection raises from.
 ``robust``
     Byzantine-robust decode-side combiners (coordinate median, trimmed mean,
     distance-to-median filtering) behind the same aggregator seam — the
@@ -30,13 +43,16 @@ The per-leaf strategies in :mod:`repro.core.aggregation` remain the
 the cost of per-leaf payloads and the partial-manual collective path.
 """
 
+# import order is cycle-load-bearing: bucketize/compressed are leaf modules,
+# robust sits on compressed, collective on both, backends on collective's
+# helpers, api on everything
 from repro.comm.bucketize import (
+    DEFAULT_BUCKET_SIZE,
     BucketLayout,
     build_layout,
     flatten_buckets,
     unflatten_buckets,
 )
-from repro.comm.collective import make_bucketed_aggregator
 from repro.comm.compressed import (
     BucketPayload,
     decode_buckets_stack,
@@ -45,12 +61,21 @@ from repro.comm.compressed import (
     init_error_buckets,
     init_server_buckets,
 )
+from repro.comm.errors import CommSpecError
 from repro.comm.robust import ROBUST_STRATEGIES, robust_combine, validate_tolerance
+from repro.comm.collective import STRATEGIES, make_bucketed_aggregator
+from repro.comm.backends import BACKENDS, resolve
+from repro.comm.api import CommSpec, make_aggregator
 
 __all__ = [
+    "BACKENDS",
     "BucketLayout",
     "BucketPayload",
+    "CommSpec",
+    "CommSpecError",
+    "DEFAULT_BUCKET_SIZE",
     "ROBUST_STRATEGIES",
+    "STRATEGIES",
     "build_layout",
     "decode_buckets_stack",
     "decode_mean_buckets",
@@ -58,7 +83,9 @@ __all__ = [
     "flatten_buckets",
     "init_error_buckets",
     "init_server_buckets",
+    "make_aggregator",
     "make_bucketed_aggregator",
+    "resolve",
     "robust_combine",
     "unflatten_buckets",
     "validate_tolerance",

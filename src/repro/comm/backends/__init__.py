@@ -1,0 +1,136 @@
+"""Pluggable collective backends for the bucketed EF exchange.
+
+The registry behind :func:`repro.comm.api.make_aggregator`: the same
+strategy semantics can ride three transports, selected per mesh —
+
+``xla``         ``lax`` collectives (all-gather). Capability-complete: the
+                only backend that materializes the gathered per-worker stack
+                the robust strategies need. The default.
+``ring``        W−1 double-buffered ``lax.ppermute`` hops (promoted from
+                ``overlap/ring.py``). Mean-only, single EF axis.
+``pallas_dma``  the remote-DMA ring kernel (:mod:`repro.kernels.dma_ring`):
+                hops are ``make_async_remote_copy`` issued in-kernel and the
+                decode accumulates straight off the compressed slot words —
+                no dense per-worker gradient ever lands in HBM. Needs a real
+                TPU ring; :func:`resolve` substitutes ``ring`` elsewhere
+                (bitwise-equal result) and logs the reason.
+
+Every backend produces the bitwise-identical (nb, bs) mean (the parity tests
+pin it), so swapping transports never perturbs a training trajectory.
+``backend="auto"`` resolves deterministically: ``ef_ring`` → ``ring``,
+everything else → ``xla``, except on a TPU mesh where the DMA-hop latency
+model in :mod:`repro.core.aggregation` acts as the accept/reject oracle for
+promoting the mean exchange to ``pallas_dma`` (see :func:`recommend_backend`;
+the ``backends`` bench suite gates the model).
+"""
+
+from __future__ import annotations
+
+import logging
+
+import jax
+
+from repro.comm.backends.base import MEAN_STRATEGIES, CollectiveBackend
+from repro.comm.backends.pallas_dma import PallasDmaBackend
+from repro.comm.backends.ring import RingBackend, ring_axis, ring_decode_mean
+from repro.comm.backends.xla import XlaBackend, gather_payload
+from repro.comm.errors import BackendCapabilityError, UnknownBackendError
+
+logger = logging.getLogger(__name__)
+
+BACKENDS: dict[str, CollectiveBackend] = {
+    "xla": XlaBackend(),
+    "ring": RingBackend(),
+    "pallas_dma": PallasDmaBackend(),
+}
+
+#: names accepted by ``CommSpec.backend`` ("auto" defers choice to resolve())
+BACKEND_CHOICES = ("auto",) + tuple(BACKENDS)
+
+
+def lookup(name: str) -> CollectiveBackend:
+    """Registry lookup; unknown names fail listing the options."""
+    if name not in BACKENDS:
+        raise UnknownBackendError(
+            f"unknown collective backend {name!r}; options: {tuple(BACKENDS)}"
+        )
+    return BACKENDS[name]
+
+
+def recommend_backend(
+    n_buckets: int, bucket_size: int, world: int, *, bytes_per_us: float | None = None
+) -> str:
+    """The accept/reject oracle for promoting the mean exchange to the DMA
+    ring: same total bytes either way, so the analytic model compares W−1
+    hop launches against one collective launch (see
+    :func:`repro.core.aggregation.dma_ring_latency_model`)."""
+    from repro.core import aggregation
+
+    if world <= 1:
+        return "xla"
+    kw = {} if bytes_per_us is None else {"bytes_per_us": bytes_per_us}
+    model = aggregation.dma_ring_latency_model(n_buckets, bucket_size, world, **kw)
+    return "pallas_dma" if model["accept"] else "xla"
+
+
+def _auto_backend(spec, mesh, ef_axes, layout) -> str:
+    from repro.comm import compressed
+
+    if spec.strategy == "ef_ring":
+        return "ring"
+    if spec.strategy != "ef_allgather":
+        return "xla"  # psum / all-to-all shapes; no payload-mean hop structure
+    comp = spec.resolved_compressor
+    sign = comp is None or compressed._is_sign(comp)
+    if (
+        BACKENDS["pallas_dma"].available()
+        and layout is not None
+        and len(ef_axes) == 1
+        and sign
+    ):
+        return recommend_backend(layout.n_buckets, layout.bucket_size, spec.world_of(mesh, ef_axes))
+    return "xla"
+
+
+def resolve(spec, mesh, ef_axes=(), *, layout=None) -> CollectiveBackend:
+    """Pick the backend instance for ``spec`` on ``mesh``.
+
+    ``backend="auto"`` is deterministic per mesh (see module docstring);
+    an explicit ``pallas_dma`` off-TPU degrades to ``ring`` with a logged
+    reason rather than failing, so one spec serves CI and hardware. The
+    returned backend has passed its capability check for this spec.
+    """
+    name = spec.backend or "auto"
+    if name == "auto":
+        name = _auto_backend(spec, mesh, ef_axes, layout)
+    be = lookup(name)
+    if name == "pallas_dma" and not BACKENDS["pallas_dma"].available():
+        logger.warning(
+            "backend 'pallas_dma' needs the TPU remote-DMA ring (jax backend "
+            "is %r here); falling back to the 'ring' backend — same W-1 hop "
+            "structure, bitwise-equal result",
+            jax.default_backend(),
+        )
+        be = BACKENDS["ring"]
+    if spec.strategy not in MEAN_STRATEGIES and be.name != "xla":
+        raise BackendCapabilityError(
+            f"strategy {spec.strategy!r} has no payload-mean hop structure to "
+            f"re-route (backends apply to {MEAN_STRATEGIES}); it runs on the "
+            "'xla' backend only"
+        )
+    be.check(spec.strategy, spec.resolved_compressor, ef_axes, mesh)
+    return be
+
+
+__all__ = [
+    "BACKENDS",
+    "BACKEND_CHOICES",
+    "CollectiveBackend",
+    "MEAN_STRATEGIES",
+    "gather_payload",
+    "lookup",
+    "recommend_backend",
+    "resolve",
+    "ring_axis",
+    "ring_decode_mean",
+]

@@ -1,0 +1,80 @@
+"""The collective-backend protocol.
+
+A *backend* is the transport of the payload-mean exchange at the heart of the
+EF strategies: given this worker's encoded bucket payload (inside the fully-
+manual ``shard_map`` of the bucketed aggregator), return either the decoded
+(nb, bs) fp32 mean over all W workers (:meth:`decode_mean` — every backend)
+or the raw gathered per-worker stack (:meth:`gather_stack` — only backends
+that materialize it; the robust order-statistics strategies need the full
+stack, which a ring never holds). Strategy semantics — EF residual updates,
+wire accounting, robust combines — stay in :mod:`repro.comm.collective`;
+backends only move bytes, which is what makes XLA-collective / ppermute-ring
+/ Pallas-remote-DMA interchangeable per mesh.
+
+All three implementations are constructed once at import time and registered
+in :mod:`repro.comm.backends` under ``BACKENDS``; selection happens through
+``comm.backends.resolve(spec, mesh, ef_axes)``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.comm import compressed
+from repro.comm.errors import BackendCapabilityError
+from repro.core.compressors import Compressor
+
+AxisNames = tuple[str, ...]
+
+# strategies whose exchange is the payload-mean a backend transports. dense /
+# majority_vote / ef_alltoall are psum / all-to-all shapes with no per-payload
+# hop structure — they run on the XLA backend only.
+MEAN_STRATEGIES = ("ef_allgather", "ef_ring")
+
+
+class CollectiveBackend:
+    """One transport for the bucketed EF exchange. Subclasses are stateless;
+    everything dynamic arrives per call."""
+
+    name: str = "?"
+    #: whether :meth:`gather_stack` is available (robust strategies need it)
+    supports_stack: bool = False
+
+    def available(self) -> bool:
+        """Whether this backend can run on the current jax backend at all.
+        ``resolve`` substitutes a fallback (with a logged reason) when not."""
+        return True
+
+    def check(self, strategy: str, comp: Compressor, ef_axes: AxisNames, mesh) -> None:
+        """Raise :class:`BackendCapabilityError` if this backend cannot run
+        ``strategy`` with ``comp`` on ``mesh``. Called at build time from
+        ``CommSpec.validate`` / ``resolve`` — never inside the traced body."""
+        from repro.comm import robust
+
+        if strategy in robust.ROBUST_STRATEGIES and not self.supports_stack:
+            raise BackendCapabilityError(
+                f"robust strategy {strategy!r} needs the full gathered worker "
+                f"stack, which the {self.name!r} backend never materializes "
+                "(mean-only); use backend='xla'"
+            )
+
+    def decode_mean(
+        self,
+        comp: Compressor,
+        payload: compressed.BucketPayload,
+        bucket_size: int,
+        ef_axes: AxisNames,
+        world: int,
+    ) -> jax.Array:
+        """Exchange this worker's payload with all W workers and return the
+        decoded (nb, bs) fp32 mean. Must be bitwise-identical across backends
+        (the parity tests pin it), so replicated out_specs stay honest."""
+        raise NotImplementedError
+
+    def gather_stack(
+        self, payload: compressed.BucketPayload, ef_axes: AxisNames
+    ) -> compressed.BucketPayload:
+        """All-gather the payload with a leading (W,) worker axis per leaf."""
+        raise BackendCapabilityError(
+            f"backend {self.name!r} cannot materialize the gathered stack"
+        )

@@ -1,0 +1,62 @@
+"""The Pallas remote-DMA ring backend.
+
+Same W−1 hop structure as the ppermute ring, but the hop is a
+``pltpu.make_async_remote_copy`` issued from inside one Pallas kernel
+(:mod:`repro.kernels.dma_ring`), and decompress-accumulate happens straight
+off the compressed slot words in VMEM — the wire never materializes a dense
+per-worker gradient in HBM. Capability gates:
+
+* needs a real TPU ring — :func:`resolve <repro.comm.backends.resolve>`
+  substitutes the ``ring`` backend off-TPU (same hop structure, same bitwise
+  result) and logs the reason, so ``backend="pallas_dma"`` specs stay
+  portable to CPU CI;
+* sign wire formats only — the kernel decodes ``words``/``scale`` payloads;
+* single EF axis and mean-only strategies, like the ppermute ring.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.comm import compressed
+from repro.comm.backends import ring as ring_backend
+from repro.comm.backends.base import CollectiveBackend
+from repro.comm.errors import BackendCapabilityError
+from repro.core.compressors import Compressor
+
+AxisNames = tuple[str, ...]
+
+
+class PallasDmaBackend(CollectiveBackend):
+    """Remote-DMA ring: compressed payloads circulate as in-kernel RDMA hops."""
+
+    name = "pallas_dma"
+    supports_stack = False
+
+    def available(self) -> bool:
+        from repro.kernels import dma_ring
+
+        return dma_ring.supported()
+
+    def check(self, strategy: str, comp: Compressor, ef_axes: AxisNames, mesh) -> None:
+        super().check(strategy, comp, ef_axes, mesh)
+        ring_backend.ring_axis(ef_axes)  # single-axis EF world required
+        if comp is not None and not compressed._is_sign(comp):
+            raise BackendCapabilityError(
+                "backend 'pallas_dma' decodes the sign wire format "
+                f"(words/scale payloads) in-kernel; got compressor {comp!r}"
+            )
+
+    def decode_mean(
+        self,
+        comp: Compressor,
+        payload: compressed.BucketPayload,
+        bucket_size: int,
+        ef_axes: AxisNames,
+        world: int,
+    ) -> jax.Array:
+        from repro.kernels import dma_ring
+
+        return dma_ring.dma_ring_decode_mean(
+            payload.data["words"], payload.data["scale"], ef_axes, world
+        )

@@ -1,0 +1,48 @@
+"""The XLA-collective backend: one ``lax.all_gather`` moves every payload.
+
+This is the transport ``ef_allgather`` (and the robust strategies riding its
+wire) always used — promoted behind the backend seam so the ring and DMA
+transports are drop-in replacements for the mean path. It is also the only
+backend that materializes the gathered per-worker stack, which the robust
+order-statistics combiners require.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+from repro.comm import compressed
+from repro.comm.backends.base import CollectiveBackend
+from repro.core.compressors import Compressor
+
+AxisNames = tuple[str, ...]
+
+
+def gather_payload(payload: compressed.BucketPayload, ef_axes: AxisNames):
+    """all-gather every payload leaf along a new leading worker axis."""
+    return jax.tree.map(lambda x: lax.all_gather(x, ef_axes, tiled=False), payload)
+
+
+class XlaBackend(CollectiveBackend):
+    """``lax`` collectives (all-gather); the default, capability-complete
+    transport on every mesh."""
+
+    name = "xla"
+    supports_stack = True
+
+    def decode_mean(
+        self,
+        comp: Compressor,
+        payload: compressed.BucketPayload,
+        bucket_size: int,
+        ef_axes: AxisNames,
+        world: int,
+    ) -> jax.Array:
+        gathered = gather_payload(payload, ef_axes)
+        return compressed.decode_mean_buckets(comp, gathered, bucket_size)
+
+    def gather_stack(
+        self, payload: compressed.BucketPayload, ef_axes: AxisNames
+    ) -> compressed.BucketPayload:
+        return gather_payload(payload, ef_axes)

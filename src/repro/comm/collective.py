@@ -20,9 +20,9 @@ Strategies (mirroring ``repro.core.aggregation``):
 ``ef_allgather``   compress → all-gather payloads → decode-mean; worker EF.
 ``ef_ring``        same payloads, exchanged as W−1 double-buffered
                    ``ppermute`` hops with a fused decompress-accumulate per
-                   hop (:mod:`repro.overlap.ring`) — same total bytes as
-                   ef_allgather, but in per-hop units the overlap scheduler
-                   can slide under backward compute.
+                   hop (:mod:`repro.comm.backends.ring`) — same total bytes
+                   as ef_allgather, but in per-hop units the overlap
+                   scheduler can slide under backward compute.
 ``ef_alltoall``    double compression: workers chunk the bucket stream,
                    all-to-all routes chunk *j* to worker *j* (the "server"
                    for those buckets), which decode-means, re-compresses with
@@ -40,9 +40,18 @@ Strategies (mirroring ``repro.core.aggregation``):
 Wire accounting is exact per bucket: a payload for one bucket costs
 ``comp.wire_bits(bucket_size)`` bits and every strategy counts how many
 bucket payloads each device *receives* per step.
+
+The payload-mean exchange itself (the hop structure of ef_allgather /
+ef_ring) is delegated to a pluggable :class:`~repro.comm.backends.CollectiveBackend`
+— strategy semantics (EF residual updates, wire accounting, robust combines)
+stay here; backends only move bytes. Construct through
+:func:`repro.comm.api.make_aggregator`; the kwarg factory below is a
+deprecated shim.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +90,14 @@ def _gather_payload(payload, ef_axes: AxisNames):
     return jax.tree.map(lambda x: lax.all_gather(x, ef_axes, tiled=False), payload)
 
 
+def _default_backend(strategy: str):
+    """Backend when the caller did not resolve one (internal/legacy entry):
+    the transport each strategy historically used."""
+    from repro.comm import backends
+
+    return backends.BACKENDS["ring" if strategy == "ef_ring" else "xla"]
+
+
 def _pad_buckets(x: jax.Array, target: int) -> jax.Array:
     """Zero-pad the bucket axis of (nb, bs) up to ``target`` buckets."""
     return jnp.pad(x, ((0, target - x.shape[0]), (0, 0)))
@@ -95,26 +112,60 @@ def make_bucketed_aggregator(
     *,
     byz_f: int = 0,
 ):
+    """Deprecated legacy factory — build a :class:`repro.comm.api.CommSpec`
+    and call :func:`repro.comm.api.make_aggregator` instead. This shim maps
+    the old kwargs onto a spec (``byz_f`` → ``ByzConfig(f=...)``) and routes
+    through the one validated construction path; returned aggregators are
+    identical.
+    """
+    warnings.warn(
+        "make_bucketed_aggregator() is deprecated; build a CommSpec and call "
+        "repro.comm.make_aggregator(spec, layout, mesh, ef_axes)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.comm import api
+    from repro.configs.base import ByzConfig
+
+    # negative budgets predate ByzConfig's own range check — surface the
+    # canonical ToleranceError, not the config constructor's
+    if byz_f < 0:
+        robust.validate_tolerance(strategy, byz_f, world_size(mesh, ef_axes))
+    spec = api.CommSpec(
+        strategy=strategy,
+        compressor=comp,
+        bucket_size=layout.bucket_size,
+        byz=ByzConfig(f=byz_f) if byz_f else None,
+    )
+    return api.make_aggregator(spec, layout, mesh, ef_axes)
+
+
+def build_bucketed_aggregator(
+    strategy: str,
+    comp: Compressor | None,
+    layout: bucketize.BucketLayout,
+    mesh,
+    ef_axes: AxisNames,
+    *,
+    byz_f: int = 0,
+    backend=None,
+):
     """Build ``fn(buckets_w, err_w, srv_w, key) -> (agg, new_err_w, new_srv_w,
     info)`` where the ``_w`` pytrees carry a leading stacked EF-world axis
     sharded over ``ef_axes`` and ``agg`` is the replicated aggregated update,
     one ``(n_buckets, bucket_size)`` fp32 array per dtype group.
 
-    ``byz_f`` is the declared adversary budget handed to the robust
-    strategies; invalid combinations (non-robust strategy with ``byz_f`` set,
-    or ``2*byz_f >= W``) raise upfront.
+    Internal constructor behind :func:`repro.comm.api.make_aggregator` —
+    assumes the spec-level validation already ran there. ``backend`` is a
+    resolved :class:`repro.comm.backends.CollectiveBackend` carrying the
+    payload-mean transport (all-gather / ppermute ring / remote-DMA ring);
+    ``None`` picks each strategy's historical default. ``byz_f`` is the
+    declared adversary budget handed to the robust strategies.
     """
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown bucketed strategy {strategy!r}; options: {STRATEGIES}")
     comp = comp or ScaledSignCompressor()
-    if strategy == "ef_alltoall" and not compressed._is_sign(comp):
-        raise ValueError("ef_alltoall supports sign compressors (wire format)")
-    if strategy == "ef_ring":
-        from repro.overlap import ring as ring_lib
-
-        ring_lib.ring_axis(ef_axes)  # single-axis EF world required
+    if backend is None:
+        backend = _default_backend(strategy)
     w = world_size(mesh, ef_axes)
-    robust.validate_tolerance(strategy, byz_f, w)
     bs = layout.bucket_size
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
     masks = tuple(bucketize.valid_mask(layout, gi) for gi in range(len(layout.groups)))
@@ -146,30 +197,22 @@ def make_bucketed_aggregator(
                 dens.append(jnp.float32(1.0))
                 wire_bits += (w - 1) * nb * bs  # d bits per peer payload
 
-            elif strategy == "ef_allgather" or strategy in robust.ROBUST_STRATEGIES:
+            elif strategy in ("ef_allgather", "ef_ring") or strategy in robust.ROBUST_STRATEGIES:
                 payload, ne, d_b = compressed.ef_encode_buckets(
                     comp, b, e, mask=masks[gi], key=gkey
                 )
-                gathered = _gather_payload(payload, ef_axes)
-                if strategy == "ef_allgather":
-                    outs.append(compressed.decode_mean_buckets(comp, gathered, bs))
-                else:
-                    # same payloads, same wire bill — robustness is decode-side
+                if strategy in robust.ROBUST_STRATEGIES:
+                    # same payloads, same wire bill — robustness is decode-side,
+                    # which is why it needs the backend's full gathered stack
+                    gathered = backend.gather_stack(payload, ef_axes)
                     outs.append(robust.robust_combine(strategy, comp, gathered, bs, byz_f))
+                else:
+                    # the payload-mean exchange: the one point where the
+                    # transport (all-gather / ppermute / remote DMA) differs
+                    outs.append(backend.decode_mean(comp, payload, bs, ef_axes, w))
                 new_errs.append(ne[None])
                 dens.append(jnp.mean(d_b))
-                wire_bits += (w - 1) * nb * bucket_bits
-
-            elif strategy == "ef_ring":
-                from repro.overlap import ring as ring_lib
-
-                payload, ne, d_b = compressed.ef_encode_buckets(
-                    comp, b, e, mask=masks[gi], key=gkey
-                )
-                outs.append(ring_lib.ring_decode_mean(comp, payload, bs, ef_axes, w))
-                new_errs.append(ne[None])
-                dens.append(jnp.mean(d_b))
-                # same total as all-gather, paid as (w−1) per-hop payloads
+                # every backend moves the same (w−1)·nb payloads per device
                 wire_bits += (w - 1) * nb * bucket_bits
 
             else:  # ef_alltoall — double compression over bucket shards

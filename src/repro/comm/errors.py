@@ -1,0 +1,56 @@
+"""One error taxonomy for aggregator construction.
+
+Before :class:`repro.comm.api.CommSpec`, the same misconfiguration could be
+rejected from three different modules with three unrelated ``ValueError``\\ s
+(strategy/bucket guards in ``train/steps.py``, the strategy check in
+``comm/collective.py``, ``validate_tolerance`` ordering in ``comm/robust.py``).
+Every construction-time rejection now raises a subclass of
+:class:`CommSpecError` — still a ``ValueError``, so existing ``pytest.raises``
+call sites and downstream ``except ValueError`` handling keep working, but the
+class names make the failure *kind* programmatic:
+
+``UnknownStrategyError``     strategy name not in ``comm.collective.STRATEGIES``
+``UnknownBackendError``      backend name not in ``comm.backends.BACKENDS``
+``BackendCapabilityError``   backend exists but cannot run this spec (robust
+                             strategies over the mean-only ring/DMA paths,
+                             multi-axis EF worlds on a ring, non-sign wire
+                             formats on the DMA kernel, ...)
+``ToleranceError``           declared Byzantine budget out of range (the
+                             ``2f >= W`` breakdown, negative ``byz_f``, or a
+                             budget on a non-robust strategy)
+``WireFormatError``          strategy requires a wire format the compressor
+                             does not speak (ef_alltoall's double compression
+                             assumes sign payloads)
+``PathConfigError``          overlap / byz knobs combined with a gradient path
+                             that cannot host them (dense or per-leaf)
+"""
+
+from __future__ import annotations
+
+
+class CommSpecError(ValueError):
+    """Base of every aggregator-construction rejection."""
+
+
+class UnknownStrategyError(CommSpecError):
+    pass
+
+
+class UnknownBackendError(CommSpecError):
+    pass
+
+
+class BackendCapabilityError(CommSpecError):
+    pass
+
+
+class ToleranceError(CommSpecError):
+    pass
+
+
+class WireFormatError(CommSpecError):
+    pass
+
+
+class PathConfigError(CommSpecError):
+    pass

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import compressed
+from repro.comm.errors import ToleranceError
 from repro.core.compressors import Compressor
 
 ROBUST_STRATEGIES = ("ef_coord_median", "ef_trimmed_mean", "ef_norm_filter")
@@ -58,16 +59,16 @@ def validate_tolerance(strategy: str, byz_f: int, world: int) -> None:
     naming the valid range.
     """
     if byz_f < 0:
-        raise ValueError(f"byz_f must be >= 0, got {byz_f}")
+        raise ToleranceError(f"byz_f must be >= 0, got {byz_f}")
     if strategy not in ROBUST_STRATEGIES:
         if byz_f:
-            raise ValueError(
+            raise ToleranceError(
                 f"byz_f={byz_f} only applies to the robust strategies "
                 f"{ROBUST_STRATEGIES}; strategy {strategy!r} would silently ignore it"
             )
         return
     if byz_f and 2 * byz_f >= world:
-        raise ValueError(
+        raise ToleranceError(
             f"{strategy}: declared tolerance byz_f={byz_f} breaks down at "
             f"world={world} (needs 2*byz_f < W); valid range here: "
             f"0 <= byz_f <= {max_tolerance(world)}"

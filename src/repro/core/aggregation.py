@@ -186,6 +186,56 @@ def ring_latency_model(
     }
 
 
+# reference single-wire bandwidth shared by the analytic latency models and
+# the bench suites (src/repro/bench/suites/{overlap,backends}.py)
+REF_WIRE_BYTES_PER_US = 1250.0
+
+# per-hop issue overhead of an in-kernel remote DMA: semaphore signal/wait +
+# descriptor setup, no XLA collective dispatch on the critical path
+DMA_HOP_LAUNCH_US = 1.0
+# one-shot XLA collective: runtime dispatch + scheduler fence ahead of the wire
+COLLECTIVE_LAUNCH_US = 10.0
+
+
+def dma_ring_latency_model(
+    n_buckets: int,
+    bucket_size: int,
+    world: int,
+    *,
+    bytes_per_us: float = REF_WIRE_BYTES_PER_US,
+    hop_launch_us: float = DMA_HOP_LAUNCH_US,
+    collective_launch_us: float = COLLECTIVE_LAUNCH_US,
+) -> dict:
+    """Analytic latency of the ``pallas_dma`` backend vs the one-shot
+    all-gather — the accept/reject oracle behind ``backend="auto"`` promotion
+    (``repro.comm.backends.recommend_backend``) and the ``backends`` bench
+    suite's gate.
+
+    Both transports move the identical (W−1)·nb sign payloads, so the
+    comparison is pure launch structure: the DMA ring pays ``hop_launch_us``
+    per hop (in-kernel semaphore + descriptor issue; the fused
+    decompress-accumulate rides the DMA wait, adding nothing to the critical
+    path), the all-gather pays one ``collective_launch_us`` dispatch up
+    front. ``accept`` is True when the ring's total does not exceed the
+    all-gather's — with the defaults that holds up to W−1 ≤ 10 hops, past
+    which per-hop overhead has eaten the dispatch saving.
+    """
+    steps = max(0, world - 1)
+    per_hop_bytes = bucketed_sign_ring_per_step_bytes(n_buckets, bucket_size)
+    per_hop_us = hop_launch_us + per_hop_bytes / bytes_per_us
+    dma_total_us = steps * per_hop_us
+    allgather_bytes = bucketed_sign_allgather_wire_bytes(n_buckets, bucket_size, world)
+    allgather_us = (collective_launch_us if steps else 0.0) + allgather_bytes / bytes_per_us
+    return {
+        "steps": steps,
+        "per_hop_bytes": per_hop_bytes,
+        "per_hop_us": per_hop_us,
+        "dma_total_us": dma_total_us,
+        "allgather_us": allgather_us,
+        "accept": bool(dma_total_us <= allgather_us),
+    }
+
+
 class AggState(NamedTuple):
     worker_error: Any  # per-worker EF residual (pytree like params) or ()
     server_error: Any  # sharded server-side residual for double compression or ()

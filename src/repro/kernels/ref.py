@@ -128,6 +128,44 @@ def bucket_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array
     return acc / w
 
 
+def dma_ring_slots_ref(
+    words_all: jax.Array, scales_all: jax.Array, widx: int
+) -> tuple[jax.Array, jax.Array]:
+    """Hop-by-hop oracle of the remote-DMA ring's slot gather (dma_ring.py).
+
+    ``words_all`` (W, nb, bs/32) / ``scales_all`` (W, nb) are every worker's
+    original payload; the return is what worker ``widx``'s canonical slot
+    buffers hold after W−1 hops. The whole ring is simulated: each hop
+    forwards whatever sits in each worker's send slot to its right neighbor
+    (payloads are never re-encoded), and worker ``widx`` files its arrival
+    under the arrival's ORIGIN id — so the result must equal the plain
+    all-gather stack for EVERY ``widx``, which is exactly the worker-
+    invariance the kernel's bitwise-parity contract rests on.
+    """
+    world = words_all.shape[0]
+    inflight = list(range(world))  # origin id in each worker's send slot
+    slot_w = [None] * world
+    slot_s = [None] * world
+    slot_w[widx] = words_all[widx]
+    slot_s[widx] = scales_all[widx]
+    for _ in range(world - 1):
+        # simultaneous hop: worker i's send slot lands at worker (i+1) % W
+        inflight = [inflight[(i - 1) % world] for i in range(world)]
+        origin = inflight[widx]
+        slot_w[origin] = words_all[origin]
+        slot_s[origin] = scales_all[origin]
+    assert all(s is not None for s in slot_w), "ring must deliver every origin"
+    return jnp.stack(slot_w), jnp.stack(slot_s)
+
+
+def dma_ring_mean_ref(words_all: jax.Array, scales_all: jax.Array, widx: int) -> jax.Array:
+    """End-to-end oracle of the ``pallas_dma`` backend for worker ``widx``:
+    slot gather followed by the canonical-order decompress-mean. Equal to
+    :func:`bucket_decompress_mean_ref` of the raw stack for every worker."""
+    slot_w, slot_s = dma_ring_slots_ref(words_all, scales_all, widx)
+    return bucket_decompress_mean_ref(slot_w, slot_s)
+
+
 def sign_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array:
     """Decompress-and-average W payloads (the all-gather hot loop).
 

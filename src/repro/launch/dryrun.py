@@ -25,6 +25,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.comm.api import CommSpec
 from repro.configs import ARCH_IDS, get_config
 from repro.core import optim
 from repro.core.compressors import ScaledSignCompressor
@@ -108,9 +109,14 @@ def lower_combo(
             cfg, key, chain, strategy, mesh, ef_axes, error_dtype=err_dt
         )
         batch_abs = SP.train_batch_specs(cfg, shape)
+        # per-leaf fallback path (bucket_size=None): preserves intra-leaf
+        # shardings, which is what the giant-model dry-run inspects
+        spec = CommSpec(
+            strategy=strategy, compressor=ScaledSignCompressor(), bucket_size=None
+        )
         bundle = steps_lib.make_train_step(
             cfg, mesh, rules,
-            strategy=strategy, comp=ScaledSignCompressor(), local_chain=chain,
+            spec=spec, local_chain=chain,
             ef_axes=ef_axes, batch_example=batch_abs, state_example=state_abs,
         )
         args = (state_abs, batch_abs)

@@ -19,6 +19,9 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.comm.api import CommSpec
+from repro.comm.backends import BACKEND_CHOICES
+from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
 from repro.configs import get_config, reduced as make_reduced
 from repro.configs.base import BYZ_ATTACKS, ByzConfig, OverlapConfig
 from repro.launch.mesh import make_host_mesh
@@ -47,6 +50,12 @@ def main():
     ap.add_argument(
         "--bucket-size", type=int, default=None,
         help="comm-bucket elements (default: repro.comm's 65536; 0 = per-leaf path)",
+    )
+    ap.add_argument(
+        "--backend", default="auto", choices=list(BACKEND_CHOICES),
+        help="collective backend for the payload-mean exchange (repro.comm."
+        "backends: xla | ring | pallas_dma; auto resolves per mesh — "
+        "pallas_dma falls back to ring off-TPU with a logged reason)",
     )
     ap.add_argument(
         "--overlap", action="store_true",
@@ -83,18 +92,24 @@ def main():
     if args.reduced:
         cfg = make_reduced(cfg)
     mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
-    kw = {}
+    bucket_size = DEFAULT_BUCKET_SIZE
     if args.bucket_size is not None:
-        kw["bucket_size"] = args.bucket_size or None  # 0 → per-leaf fallback
+        bucket_size = args.bucket_size or None  # 0 → per-leaf fallback
+    spec = CommSpec(
+        strategy=args.strategy,
+        compressor=args.compressor,
+        bucket_size=bucket_size,
+        backend=args.backend,
+        overlap=OverlapConfig.from_args(args.overlap, args.overlap_groups),
+        byz=ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f, args.byz_scale),
+    ).validate()  # reject bad flag combinations before any compile
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
         lr=args.lr, momentum=args.momentum, weight_decay=args.weight_decay,
-        optimizer=args.optimizer, strategy=args.strategy,
-        compressor=args.compressor, policy=args.policy, seed=args.seed,
-        microbatches=args.microbatches,
-        overlap=OverlapConfig.from_args(args.overlap, args.overlap_groups),
-        byz=ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f, args.byz_scale),
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, **kw,
+        optimizer=args.optimizer, compressor=args.compressor,
+        policy=args.policy, seed=args.seed,
+        microbatches=args.microbatches, comm=spec,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     _, history = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))
     print(f"final_loss={history[-1]['loss']:.4f}")

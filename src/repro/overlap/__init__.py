@@ -16,16 +16,15 @@ layers' backward is still running.
     Static grouping of buckets by reverse-AD availability rank, greedy-
     balanced by wire bytes; pure function of (layout, param structure).
 ``ring``
-    Double-buffered ``ppermute`` ring exchange: payloads stay
-    sign-compressed on the wire for all W−1 hops and fold into the fp32
-    accumulator through the fused decompress-accumulate Pallas kernel —
-    the per-hop alternative to the one-shot ``all_gather``
-    (``strategy="ef_ring"``).
+    Compatibility re-export of :mod:`repro.comm.backends.ring` — the
+    double-buffered ``ppermute`` ring exchange was promoted to a collective
+    *backend* so any payload-mean strategy can ride it
+    (``strategy="ef_ring"``, or ``CommSpec(backend="ring")``).
 ``pipeline``
-    The executor: an overlapped drop-in for
-    :func:`repro.comm.collective.make_bucketed_aggregator` plus the
-    pipeline latency model that turns measured per-group component times
-    into the exposed-communication metric the bench suite gates.
+    The executor :func:`repro.comm.make_aggregator` builds when
+    ``spec.overlap`` is set, plus the pipeline latency model that turns
+    measured per-group component times into the exposed-communication
+    metric the bench suite gates.
 """
 
 from repro.overlap.pipeline import (

@@ -1,7 +1,8 @@
 """The overlap executor: per-group compress → collective pipelining.
 
-``make_overlapped_aggregator`` is a drop-in for
-:func:`repro.comm.collective.make_bucketed_aggregator` that executes the
+``build_overlapped_aggregator`` (reached via ``repro.comm.make_aggregator``
+with ``spec.overlap`` set) is a drop-in for the one-shot bucketed
+aggregator that executes the
 exchange per :class:`~repro.overlap.schedule.OverlapSchedule` group instead
 of in one shot. Inside the (fully-manual) ``shard_map`` body the groups are
 laid out in reverse-AD availability order as independent dataflow chains:
@@ -29,16 +30,17 @@ tests/test_overlap.py pins bitwise equality.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import bucketize, compressed
-from repro.comm.collective import _gather_payload, _worker_index, world_size
+from repro.comm.collective import _default_backend, _worker_index, world_size
 from repro.core.aggregation import AggInfo
 from repro.core.compressors import Compressor, ScaledSignCompressor
-from repro.overlap import ring as ring_lib
 from repro.overlap.schedule import OverlapSchedule
 from repro.utils import compat
 
@@ -59,9 +61,41 @@ def make_overlapped_aggregator(
     mesh,
     ef_axes: AxisNames,
 ):
-    """Schedule-driven aggregator with the same signature/contract as
-    ``make_bucketed_aggregator``: ``fn(buckets_w, err_w, srv_w, key) ->
-    (agg, new_err_w, new_srv_w, info)``."""
+    """Deprecated legacy factory — build a :class:`repro.comm.api.CommSpec`
+    with ``overlap=OverlapConfig(...)`` and call
+    :func:`repro.comm.api.make_aggregator` instead (it derives the schedule
+    from the parameter tree). This shim keeps working for callers that built
+    their own :class:`OverlapSchedule`."""
+    warnings.warn(
+        "make_overlapped_aggregator() is deprecated; build a CommSpec with "
+        "overlap=OverlapConfig(...) and call repro.comm.make_aggregator(spec, "
+        "layout, mesh, ef_axes, params=...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return build_overlapped_aggregator(strategy, comp, layout, schedule, mesh, ef_axes)
+
+
+def build_overlapped_aggregator(
+    strategy: str,
+    comp: Compressor | None,
+    layout: bucketize.BucketLayout,
+    schedule: OverlapSchedule,
+    mesh,
+    ef_axes: AxisNames,
+    *,
+    backend=None,
+):
+    """Schedule-driven aggregator with the same signature/contract as the
+    one-shot ``build_bucketed_aggregator``: ``fn(buckets_w, err_w, srv_w,
+    key) -> (agg, new_err_w, new_srv_w, info)``.
+
+    ``backend`` carries the payload-mean transport (see
+    :mod:`repro.comm.backends`). Stack-capable backends keep the gather /
+    decode split across the two phases (collective issued in phase 1, decode
+    deferred to phase 2); mean-only backends fuse decode into the phase-1
+    exchange — both orders are bitwise-identical to the one-shot path.
+    """
     if strategy not in OVERLAP_STRATEGIES:
         raise ValueError(
             f"overlap supports {OVERLAP_STRATEGIES}, got {strategy!r} "
@@ -70,6 +104,8 @@ def make_overlapped_aggregator(
     if schedule.layout is not layout and schedule.layout != layout:
         raise ValueError("schedule was built for a different BucketLayout")
     comp = comp or ScaledSignCompressor()
+    if backend is None:
+        backend = _default_backend(strategy)
     w = world_size(mesh, ef_axes)
     bs = layout.bucket_size
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
@@ -108,12 +144,12 @@ def make_overlapped_aggregator(
                     payload, ne, d_b = compressed.ef_encode_buckets(
                         comp, b, e, mask=m, keys=None if ks is None else ks[sl.start : sl.stop]
                     )
-                    if strategy == "ef_ring":
-                        out = ring_lib.ring_decode_mean(comp, payload, bs, ef_axes, w)
-                        staged.append((sl, ne, d_b, out))
+                    if backend.supports_stack:
+                        # issue the collective now, decode in phase 2
+                        staged.append((sl, ne, d_b, backend.gather_stack(payload, ef_axes)))
                     else:
-                        gathered = _gather_payload(payload, ef_axes)
-                        staged.append((sl, ne, d_b, gathered))
+                        out = backend.decode_mean(comp, payload, bs, ef_axes, w)
+                        staged.append((sl, ne, d_b, out))
                     wire_bits += (w - 1) * nb * bucket_bits
 
         # ---- phase 2: decode gathered payloads, scatter into full stacks
@@ -121,7 +157,7 @@ def make_overlapped_aggregator(
         new_errs = [jnp.zeros((g.n_buckets, bs), jnp.float32) for g in layout.groups]
         dens_full = [jnp.ones((g.n_buckets,), jnp.float32) for g in layout.groups]
         for sl, ne, d_b, result in staged:
-            if strategy == "ef_allgather":
+            if strategy != "majority_vote" and backend.supports_stack:
                 result = compressed.decode_mean_buckets(comp, result, bs)
             outs[sl.group] = outs[sl.group].at[sl.start : sl.stop].set(result)
             if ne is not None:

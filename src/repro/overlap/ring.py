@@ -1,116 +1,13 @@
-"""Double-buffered ring exchange of compressed bucket payloads.
+"""Compatibility shim: the ring exchange moved to the backend registry.
 
-``ef_allgather`` pays its whole wire cost in ONE collective after the last
-bucket is compressed. The ring pays the same total bytes as W−1 *hops* of a
-single payload each — per-step bytes × (W−1), see
-``repro.core.aggregation.bucketed_sign_ring_wire_bytes`` — which is the shape
-the overlap pipeline wants: each hop is a small, independently schedulable
-unit that the XLA latency-hiding scheduler (or, on the ROADMAP's multi-
-backend path, a Pallas remote-DMA ring per the accelerator guide) can slide
-under backward compute.
-
-Mechanics per hop (``lax.ppermute`` to the next worker on the ring):
-
-    carry = (inflight payload, fp32 accumulator)
-    hop t: issue ppermute(inflight)            ── the DMA of hop t
-           acc ← fused-accumulate(acc, inflight)  ── overlaps the DMA
-
-The payload stays **sign-compressed on the wire for every hop** — workers
-circulate the original payloads rather than partial sums, so nothing is
-ever re-compressed and the result is BITWISE equal to the all-gather path
-on every worker:
-
-* ``W ≤ 2`` — per-hop fused decompress-accumulate (the Pallas kernel
-  ``kernels.ops.bucket_sign_accumulate``): with at most one remote payload
-  the (own + arrival) sum is commutative, so every worker associates
-  identically and the decode cost rides the hop instead of piling up at
-  the end.
-* ``W ≥ 3`` — arrival orders are per-worker *rotations*; accumulating in
-  arrival order would leave each worker a differently-associated fp32 sum,
-  and params the sharding layer believes are replicated (out_specs ``P()``)
-  would silently drift apart over a run. Arrivals are therefore stored into
-  canonical origin-id slots (same layout ``lax.all_gather`` produces) and
-  decoded by the exact decode-mean the all-gather strategy uses — identical
-  association on every worker, while the wire still moves as W−1
-  double-buffered hops the overlap schedule can slide under compute.
+The double-buffered ppermute ring was promoted verbatim to
+:mod:`repro.comm.backends.ring` when the collective transports became
+pluggable (``CommSpec.backend``) — the overlap pipeline now receives it as a
+resolved :class:`~repro.comm.backends.CollectiveBackend` instead of importing
+this module. Kept as a silent re-export so existing imports keep working;
+new code should import from ``repro.comm.backends``.
 """
 
-from __future__ import annotations
+from repro.comm.backends.ring import RingBackend, ring_axis, ring_decode_mean
 
-import jax
-from jax import lax
-
-from repro.comm import compressed
-from repro.core.compressors import Compressor
-
-AxisNames = tuple[str, ...]
-
-
-def ring_axis(ef_axes: AxisNames) -> str:
-    """The single mesh axis the ring runs over (multi-axis EF worlds would
-    need a linearized neighbor table — not supported)."""
-    if len(ef_axes) != 1:
-        raise ValueError(f"ef_ring needs exactly one EF axis, got {ef_axes!r}")
-    return ef_axes[0]
-
-
-def _accumulate(
-    comp: Compressor, acc: jax.Array, payload: compressed.BucketPayload, bucket_size: int
-) -> jax.Array:
-    if compressed._is_sign(comp):
-        from repro.kernels import ops
-
-        return ops.bucket_sign_accumulate(acc, payload.data["words"], payload.data["scale"])
-    return acc + compressed.decode_buckets(comp, payload, bucket_size)
-
-
-def ring_decode_mean(
-    comp: Compressor,
-    payload: compressed.BucketPayload,
-    bucket_size: int,
-    ef_axes: AxisNames,
-    world: int,
-) -> jax.Array:
-    """W−1 double-buffered ppermute hops → (nb, bs) mean, bitwise equal to
-    the all-gather decode-mean on every worker (see module docstring).
-
-    Runs inside the fully-manual ``shard_map`` of the bucketed aggregator;
-    ``payload`` is this worker's own encoded buckets. The hop loop is
-    unrolled (W is static and small) so every ppermute and the store /
-    accumulate it overlaps are separate XLA ops with no false carry
-    dependency.
-    """
-    axis = ring_axis(ef_axes)
-    perm = [(i, (i + 1) % world) for i in range(world)]
-    inflight = payload
-
-    if world <= 2:
-        # fused per-hop accumulate: (own + one arrival) is commutative, so
-        # the association is identical on both workers
-        nb = jax.tree.leaves(payload.data)[0].shape[0]
-        acc = jax.numpy.zeros((nb, bucket_size), jax.numpy.float32)
-        for _ in range(world - 1):
-            nxt = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), inflight.data)
-            acc = _accumulate(comp, acc, inflight, bucket_size)  # overlaps the hop
-            inflight = compressed.BucketPayload(data=nxt)
-        acc = _accumulate(comp, acc, inflight, bucket_size)
-        return acc / world
-
-    # W ≥ 3: canonical origin-id slots + the all-gather path's own decode,
-    # so every worker associates the fp32 sum identically (replication-safe)
-    widx = lax.axis_index(axis)
-    slots = jax.tree.map(lambda x: jax.numpy.zeros((world,) + x.shape, x.dtype), payload.data)
-
-    def store(slots, data, origin):
-        return jax.tree.map(
-            lambda s, x: lax.dynamic_update_index_in_dim(s, x, origin, 0), slots, data
-        )
-
-    slots = store(slots, inflight.data, widx)
-    for t in range(world - 1):
-        nxt = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), inflight.data)
-        # arrival of hop t came from worker (widx − t − 1) mod W; the store
-        # overlaps the next hop's DMA just like the fused accumulate did
-        slots = store(slots, nxt, (widx - t - 1) % world)
-        inflight = compressed.BucketPayload(data=nxt)
-    return compressed.decode_mean_buckets(comp, compressed.BucketPayload(data=slots), bucket_size)
+__all__ = ["RingBackend", "ring_axis", "ring_decode_mean"]

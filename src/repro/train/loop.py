@@ -8,6 +8,7 @@ from typing import Any, Callable, Iterator
 
 import jax
 
+from repro.comm.api import CommSpec
 from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
 from repro.configs.base import ByzConfig, OverlapConfig
 from repro.core import optim
@@ -52,6 +53,22 @@ class TrainJob:
     # Byzantine knobs: fault-injected worker lanes + declared robust
     # tolerance (repro.comm.adversary / repro.comm.robust); None = honest
     byz: ByzConfig | None = None
+    # the one spec describing the whole gradient exchange; None folds the
+    # individual legacy fields above into a CommSpec (comm_spec()), set it
+    # to override them wholesale (e.g. to pick a collective backend)
+    comm: CommSpec | None = None
+
+    def comm_spec(self) -> CommSpec:
+        """The job's gradient-exchange spec (``comm`` or the legacy fields)."""
+        if self.comm is not None:
+            return self.comm
+        return CommSpec(
+            strategy=self.strategy,
+            compressor=self.compressor,
+            bucket_size=self.bucket_size,
+            overlap=self.overlap,
+            byz=self.byz,
+        )
 
 
 def _local_chain(job: TrainJob) -> optim.Transform:
@@ -76,29 +93,26 @@ def _local_chain(job: TrainJob) -> optim.Transform:
 
 def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: Callable | None = None):
     cfg, mesh = job.cfg, job.mesh
+    spec = job.comm_spec()
     policy = job.policy or default_policy(cfg)
     rules = ShardingRules(cfg, mesh, policy)
-    ef_axes = ef_axis_names(mesh, policy) if job.strategy != "dense" else ()
+    ef_axes = ef_axis_names(mesh, policy) if spec.strategy != "dense" else ()
     chain = _local_chain(job)
-    comp = get_compressor(job.compressor)
     key = jax.random.PRNGKey(job.seed)
 
     if batches is None:
         batches = synthetic.token_batches(job.seed, job.batch, job.seq, cfg.vocab_size)
 
-    bucket_size = job.bucket_size if job.strategy != "dense" else None
+    bucket_size = spec.bucket_size if spec.strategy != "dense" else None
     with use_mesh(mesh):
         state = init_train_state(
-            cfg, key, chain, job.strategy, mesh, ef_axes, bucket_size=bucket_size
+            cfg, key, chain, spec.strategy, mesh, ef_axes, bucket_size=bucket_size
         )
         example = next(batches)
         bundle = steps_lib.make_train_step(
             cfg, mesh, rules,
-            strategy=job.strategy, comp=comp, local_chain=chain, ef_axes=ef_axes,
+            spec=spec, local_chain=chain, ef_axes=ef_axes,
             batch_example=example, state_example=state, microbatches=job.microbatches,
-            bucket_size=bucket_size,
-            overlap_groups=job.overlap.n_groups if job.overlap else None,
-            byz=job.byz,
         )
         state = jax.device_put(state, bundle.in_shardings[0])
         step_fn = bundle.jit()

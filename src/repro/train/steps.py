@@ -39,15 +39,13 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm import adversary as comm_adversary
+from repro.comm import api as comm_api
 from repro.comm import bucketize as comm_bucketize
 from repro.comm import collective as comm_collective
-from repro.comm import robust as comm_robust
-from repro.configs.base import ByzConfig
+from repro.configs.base import ByzConfig, OverlapConfig
 from repro.core import aggregation, optim
 from repro.core.compressors import Compressor
 from repro.models import layers, transformer
-from repro.overlap import pipeline as overlap_pipeline
-from repro.overlap import schedule as overlap_schedule
 from repro.utils import compat
 from repro.models.act_sharding import activation_sharding
 from repro.models.config import ModelConfig
@@ -251,6 +249,7 @@ def make_train_step(
     mesh,
     rules: ShardingRules,
     *,
+    spec: comm_api.CommSpec | None = None,
     strategy: str = "dense",
     comp: Compressor | None = None,
     local_chain: optim.Transform,
@@ -262,17 +261,25 @@ def make_train_step(
     overlap_groups: int | None = None,
     byz: ByzConfig | None = None,
 ) -> StepBundle:
-    if overlap_groups is not None and (strategy == "dense" or bucket_size is None):
-        raise ValueError(
-            "overlap_groups needs the bucketed EF path (an EF strategy with "
-            f"bucket_size set); got strategy={strategy!r}, bucket_size={bucket_size!r}"
+    """Build the train step for one :class:`~repro.comm.api.CommSpec`.
+
+    ``spec`` is the one description of the gradient exchange (strategy,
+    compressor, bucket size, collective backend, overlap/byz riders); the
+    individual keyword knobs remain accepted as the legacy spelling and are
+    folded into a spec when ``spec`` is not given (``spec`` wins otherwise).
+    All path validation happens in ``CommSpec.validate`` — structural checks
+    here, the world-dependent tolerance check at aggregator build time.
+    """
+    if spec is None:
+        spec = comm_api.CommSpec(
+            strategy=strategy,
+            compressor=comp,
+            bucket_size=bucket_size,
+            overlap=OverlapConfig(n_groups=overlap_groups) if overlap_groups is not None else None,
+            byz=byz,
         )
-    if byz is not None and (strategy == "dense" or bucket_size is None):
-        raise ValueError(
-            "byz fault injection / tolerance needs the bucketed EF path (the "
-            "adversary owns lanes of the vmap'd worker axis); got "
-            f"strategy={strategy!r}, bucket_size={bucket_size!r}"
-        )
+    spec.validate()
+    strategy, comp, bucket_size = spec.strategy, spec.resolved_compressor, spec.bucket_size
     param_specs = rules.param_specs(state_example.params)
     opt_specs_base = jax.tree.map(
         lambda _: P(), state_example.opt_state
@@ -313,10 +320,9 @@ def make_train_step(
     assert ef_axes, "EF strategies need at least one manual worker axis"
     if bucket_size is not None:
         return _make_bucketed_ef_step(
-            cfg, mesh, rules, strategy=strategy, comp=comp, local_chain=local_chain,
+            cfg, mesh, rules, spec=spec, local_chain=local_chain,
             ef_axes=ef_axes, batch_example=batch_example, state_example=state_example,
-            microbatches=microbatches, bucket_size=bucket_size,
-            overlap_groups=overlap_groups, byz=byz,
+            microbatches=microbatches,
             param_specs=param_specs, opt_specs_base=opt_specs_base,
             batch_specs=batch_specs,
         )
@@ -399,53 +405,40 @@ def _make_bucketed_ef_step(
     mesh,
     rules: ShardingRules,
     *,
-    strategy: str,
-    comp: Compressor | None,
+    spec: comm_api.CommSpec,
     local_chain: optim.Transform,
     ef_axes: tuple[str, ...],
     batch_example: Any,
     state_example: TrainState,
     microbatches: int,
-    bucket_size: int,
-    overlap_groups: int | None = None,
-    byz: ByzConfig | None = None,
     param_specs,
     opt_specs_base,
     batch_specs,
 ) -> StepBundle:
     """EF train step through the bucketed comm layer (see module docstring).
 
-    With ``overlap_groups`` set the exchange runs through the overlap
-    pipeline instead of one aggregator call: a static
+    The aggregator comes from the one construction path,
+    :func:`repro.comm.api.make_aggregator`: it validates ``spec`` against the
+    mesh, resolves the collective backend, and — with ``spec.overlap`` set —
+    builds the overlap pipeline (a static
     :class:`~repro.overlap.schedule.OverlapSchedule` groups the buckets by
-    reverse-AD availability and :func:`make_overlapped_aggregator` issues
-    per-group collectives as independent dataflow chains. When the model
-    admits it, the grad fn is the staged-``vjp`` variant so the head-stage
-    groups' collectives are data-ready before the backward scan finishes.
-    The trajectory is bitwise identical to the one-shot step.
+    reverse-AD availability and per-group collectives issue as independent
+    dataflow chains). When the model admits it, the overlapped grad fn is the
+    staged-``vjp`` variant so the head-stage groups' collectives are
+    data-ready before the backward scan finishes. The trajectory is bitwise
+    identical to the one-shot step.
     """
+    strategy, comp, byz = spec.strategy, spec.resolved_compressor, spec.byz
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
     w = comm_collective.world_size(mesh, ef_axes)
-    layout = comm_bucketize.build_layout(state_example.params, bucket_size)
-    byz_f = byz.f if byz is not None else 0
+    layout = comm_bucketize.build_layout(state_example.params, spec.bucket_size)
     # a 1-worker world has no collective latency to hide — pipelining would
-    # be pure dispatch overhead, so overlap degenerates to the one-shot path
-    overlap = overlap_groups is not None and w > 1
-    if overlap:
-        # robust strategies are one-shot only (make_overlapped_aggregator
-        # rejects them); a declared tolerance on an overlappable strategy is
-        # rejected here with the same upfront guard as the one-shot path
-        comm_robust.validate_tolerance(strategy, byz_f, w)
-        schedule = overlap_schedule.build_schedule(
-            layout, state_example.params, n_groups=overlap_groups, comp=comp
-        )
-        agg_fn = overlap_pipeline.make_overlapped_aggregator(
-            strategy, comp, layout, schedule, mesh, ef_axes
-        )
-    else:
-        agg_fn = comm_collective.make_bucketed_aggregator(
-            strategy, comp, layout, mesh, ef_axes, byz_f=byz_f
-        )
+    # be pure dispatch overhead, so make_aggregator degenerates overlap to
+    # the one-shot path there
+    overlap = spec.overlap is not None and w > 1
+    agg_fn = comm_api.make_aggregator(
+        spec, layout, mesh, ef_axes, params=state_example.params
+    )
     attackers = comm_adversary.n_attackers(byz.fraction, w) if byz is not None else 0
 
     auto_dp = tuple(a for a in rules.dp_axes if a not in ef_axes)

@@ -15,6 +15,13 @@ def pytest_configure(config):
         "tpu: needs a real TPU backend (Pallas compile, not interpret mode); "
         "auto-skipped on CPU/GPU so CI on GitHub-hosted runners stays green",
     )
+    config.addinivalue_line(
+        "markers",
+        "pallas: exercises a Pallas kernel or its interpret-mode reference "
+        "oracle; runs everywhere (interpret mode works on CPU) and is selected "
+        "as its own CI step so kernel regressions are visible — parts that "
+        "additionally need hardware carry the tpu marker on top",
+    )
 
 
 def pytest_collection_modifyitems(config, items):

@@ -20,7 +20,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import adversary, bucketize, collective, compressed, robust
+from repro.comm import (
+    CommSpec,
+    adversary,
+    bucketize,
+    compressed,
+    make_aggregator,
+    robust,
+)
 from repro.configs.base import BYZ_ATTACKS, ByzConfig
 from repro.core import aggregation
 from repro.core.compressors import ScaledSignCompressor
@@ -164,14 +171,18 @@ def test_validate_tolerance_breakdown_point():
         robust.validate_tolerance("ef_allgather", 1, 8)
 
 
-def test_make_bucketed_aggregator_rejects_breakdown():
+def test_make_aggregator_rejects_breakdown():
     mesh = make_host_mesh(data=1, model=1)
     layout = bucketize.build_layout({"x": jnp.zeros((256,), jnp.float32)}, 128)
+    spec = CommSpec(
+        strategy="ef_coord_median",
+        compressor=ScaledSignCompressor(),
+        bucket_size=128,
+        byz=ByzConfig(f=1),
+    )
     with use_mesh(mesh):
         with pytest.raises(ValueError, match="0 <= byz_f <= 0"):
-            collective.make_bucketed_aggregator(
-                "ef_coord_median", ScaledSignCompressor(), layout, mesh, ("data",), byz_f=1
-            )
+            make_aggregator(spec, layout, mesh, ("data",))
 
 
 def test_robust_strategies_rejected_on_per_leaf_path():
@@ -302,10 +313,10 @@ def test_bucketed_aggregator_robust_single_device(strategy):
     err = tuple(jnp.ones_like(b) * 0.1 for b in buckets_w)
     key = jax.random.PRNGKey(0)
     with use_mesh(mesh):
-        ag = jax.jit(
-            collective.make_bucketed_aggregator("ef_allgather", comp, layout, mesh, ("data",))
-        )
-        rb = jax.jit(collective.make_bucketed_aggregator(strategy, comp, layout, mesh, ("data",)))
+        spec_ag = CommSpec(strategy="ef_allgather", compressor=comp, bucket_size=128)
+        spec_rb = CommSpec(strategy=strategy, compressor=comp, bucket_size=128)
+        ag = jax.jit(make_aggregator(spec_ag, layout, mesh, ("data",)))
+        rb = jax.jit(make_aggregator(spec_rb, layout, mesh, ("data",)))
         o1, o2 = ag(buckets_w, err, (), key), rb(buckets_w, err, (), key)
     # W=1, byz_f=0: identical payloads, identical decode → bitwise equal,
     # and the robust strategies bill exactly the allgather wire bytes

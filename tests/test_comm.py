@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import bucketize, collective, compressed
+from repro.comm import CommSpec, bucketize, compressed, make_aggregator
 from repro.core import aggregation
 from repro.core import compressors as C
 from repro.kernels import ef_sign, ops, ref
@@ -204,7 +204,8 @@ def test_bucketed_aggregator_single_device(strategy):
         else ()
     )
     with use_mesh(mesh):
-        agg = collective.make_bucketed_aggregator(strategy, comp, layout, mesh, ("data",))
+        spec = CommSpec(strategy=strategy, compressor=comp, bucket_size=128)
+        agg = make_aggregator(spec, layout, mesh, ("data",))
         out, new_err, new_srv, info = jax.jit(agg)(buckets_w, err, srv, jax.random.PRNGKey(0))
     b0, out0 = np.asarray(buckets[0]), np.asarray(out[0])
     mask = np.asarray(bucketize.valid_mask(layout, 0))

@@ -16,16 +16,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import bucketize, collective
+from repro.comm import CommSpec, bucketize, make_aggregator
 from repro.core.compressors import ScaledSignCompressor, density
 from repro.kernels import ef_sign, ops, ref
 from repro.launch.mesh import make_host_mesh, use_mesh
-from repro.overlap import (
-    build_schedule,
-    exposure_report,
-    make_overlapped_aggregator,
-    reverse_ad_ranks,
-)
+from repro.overlap import build_schedule, exposure_report, reverse_ad_ranks
+from repro.overlap.pipeline import build_overlapped_aggregator
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -159,11 +155,10 @@ def test_overlapped_aggregator_bitwise_single_device():
     err = tuple(jnp.ones_like(b) * 0.1 for b in buckets_w)
     key = jax.random.PRNGKey(0)
     with use_mesh(mesh):
-        one = jax.jit(
-            collective.make_bucketed_aggregator("ef_allgather", comp, layout, mesh, ("data",))
-        )
+        spec = CommSpec(strategy="ef_allgather", compressor=comp, bucket_size=64)
+        one = jax.jit(make_aggregator(spec, layout, mesh, ("data",)))
         ovl = jax.jit(
-            make_overlapped_aggregator("ef_allgather", comp, layout, sched, mesh, ("data",))
+            build_overlapped_aggregator("ef_allgather", comp, layout, sched, mesh, ("data",))
         )
         o1, o2 = one(buckets_w, err, (), key), ovl(buckets_w, err, (), key)
     for a, b in zip(o1[0] + o1[1], o2[0] + o2[1]):
@@ -177,7 +172,7 @@ def test_overlapped_aggregator_rejects_alltoall():
     layout = bucketize.build_layout(_tree(), 64)
     sched = build_schedule(layout, _tree(), n_groups=2)
     with pytest.raises(ValueError, match="ef_alltoall"):
-        make_overlapped_aggregator("ef_alltoall", None, layout, sched, mesh, ("data",))
+        build_overlapped_aggregator("ef_alltoall", None, layout, sched, mesh, ("data",))
 
 
 def test_ef_ring_rejected_on_per_leaf_path():
@@ -251,7 +246,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, os.path.join(%(repo)r, "src"))
 import jax, jax.numpy as jnp, numpy as np
-from repro.comm import bucketize, collective
+from repro.comm import CommSpec, bucketize, make_aggregator
 from repro.core.compressors import get_compressor
 from repro.launch.mesh import make_host_mesh, use_mesh
 
@@ -270,10 +265,12 @@ with use_mesh(mesh):
                      ("top_k", {"k": 16}), ("random_k", {"k": 16}),
                      ("qsgd", {"s": 7}), ("identity", {})]:
         comp = get_compressor(name, **kw)
-        ag = jax.jit(collective.make_bucketed_aggregator(
-            "ef_allgather", comp, layout, mesh, ("data",)))
-        ring = jax.jit(collective.make_bucketed_aggregator(
-            "ef_ring", comp, layout, mesh, ("data",)))
+        ag = jax.jit(make_aggregator(
+            CommSpec(strategy="ef_allgather", compressor=comp, bucket_size=128),
+            layout, mesh, ("data",)))
+        ring = jax.jit(make_aggregator(
+            CommSpec(strategy="ef_ring", compressor=comp, bucket_size=128),
+            layout, mesh, ("data",)))
         o1, o2 = ag(buckets_w, err_w, (), key), ring(buckets_w, err_w, (), key)
         # canonical-slot ring: same payloads, same decode → bitwise equal
         agg_equal = all(np.array_equal(np.asarray(a), np.asarray(b))
