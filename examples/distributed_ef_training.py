@@ -71,10 +71,14 @@ def main():
     overlap = OverlapConfig.from_args(args.overlap, args.overlap_groups)
     byz = ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f)
     # one spec describes the whole gradient exchange: strategy, compressor,
-    # bucketing, collective backend, and the overlap/byz riders
+    # bucketing, collective backend, and the overlap/byz/telemetry riders.
+    # telemetry="full" records per-group EF-residual norms + densities in the
+    # step records at no trajectory cost (bitwise-identical either way);
+    # the dense baseline has no bucketed intermediates to read, so it stays off
     spec = CommSpec(
         strategy=args.strategy, compressor="scaled_sign",
         backend=args.backend, overlap=overlap, byz=byz,
+        telemetry="off" if args.strategy == "dense" else "full",
     ).validate()
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
@@ -129,6 +133,13 @@ def main():
     print(f"\nloss {first:.3f} -> {last:.3f}; "
           f"wire bytes/step/device = {hist[-1]['wire_bytes']:.3g}; "
           f"corrected-gradient density φ = {hist[-1]['density']:.3f}")
+    # telemetry="full" step records carry the per-bucket-group reads: the
+    # paper's bounded EF-residual ||e_t|| and the per-group sign density
+    if "err_l2" in hist[-1]:
+        e0, e1 = hist[0]["err_l2"], hist[-1]["err_l2"]
+        print(f"EF-residual L2 per group: {['%.3g' % x for x in e0]} -> "
+              f"{['%.3g' % x for x in e1]}; "
+              f"per-group density: {['%.3f' % x for x in hist[-1]['group_density']]}")
     # short smoke runs (< ~100 steps) don't move the loss at this model/batch
     # scale on ANY strategy (dense included) — only assert convergence on the
     # documented few-hundred-step horizon

@@ -14,7 +14,7 @@ from typing import Callable
 
 KNOWN_SUITES = (
     "kernels", "aggregation", "comm", "backends", "overlap", "byz", "convergence", "serve",
-    "roofline", "smoke",
+    "roofline", "obs", "smoke",
 )
 
 

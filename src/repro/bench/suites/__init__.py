@@ -8,6 +8,7 @@ from repro.bench.suites import (  # noqa: F401
     comm,
     convergence,
     kernels,
+    obs,
     overlap,
     roofline,
     serve,

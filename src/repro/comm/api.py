@@ -43,7 +43,9 @@ class CommSpec:
     DMA-hop latency oracle for ``pallas_dma``; everything else → ``xla``).
     ``bucket_size=None`` selects the per-leaf fallback path in
     ``repro.core.aggregation`` (train-step only; the bucketed aggregator
-    itself always has a layout).
+    itself always has a layout). ``telemetry`` turns on the in-graph
+    :class:`repro.obs.telemetry.Telemetry` aux output (``"off"`` | ``"full"``;
+    off compiles to the exact pre-telemetry program).
     """
 
     strategy: str = "dense"
@@ -52,6 +54,7 @@ class CommSpec:
     backend: str = "auto"
     byz: ByzConfig | None = None
     overlap: OverlapConfig | None = None
+    telemetry: str = "off"
 
     @property
     def resolved_compressor(self) -> Compressor | None:
@@ -104,6 +107,19 @@ class CommSpec:
                 "adversary owns lanes of the vmap'd worker axis); got "
                 f"strategy={self.strategy!r}, bucket_size={self.bucket_size!r}"
             )
+        from repro.obs.telemetry import TELEMETRY_CHOICES
+
+        if self.telemetry not in TELEMETRY_CHOICES:
+            raise PathConfigError(
+                f"unknown telemetry level {self.telemetry!r}; options: {TELEMETRY_CHOICES}"
+            )
+        if self.telemetry != "off" and (self.strategy == "dense" or self.bucket_size is None):
+            raise PathConfigError(
+                "in-graph telemetry reads the bucketed aggregator's intermediates "
+                "(per-group EF residuals / densities); it needs a bucketed strategy "
+                f"with bucket_size set, got strategy={self.strategy!r}, "
+                f"bucket_size={self.bucket_size!r}"
+            )
         if ef_axes is not None and self.strategy == "ef_ring":
             backends.ring_axis(ef_axes)  # single-axis EF world required
         if world is not None:
@@ -148,8 +164,22 @@ def make_aggregator(
             layout, params, n_groups=spec.overlap.n_groups, comp=comp
         )
         return pipeline.build_overlapped_aggregator(
-            spec.strategy, comp, layout, sched, mesh, ef_axes, backend=backend
+            spec.strategy,
+            comp,
+            layout,
+            sched,
+            mesh,
+            ef_axes,
+            backend=backend,
+            telemetry=spec.telemetry == "full",
         )
     return collective.build_bucketed_aggregator(
-        spec.strategy, comp, layout, mesh, ef_axes, byz_f=spec.byz_f, backend=backend
+        spec.strategy,
+        comp,
+        layout,
+        mesh,
+        ef_axes,
+        byz_f=spec.byz_f,
+        backend=backend,
+        telemetry=spec.telemetry == "full",
     )

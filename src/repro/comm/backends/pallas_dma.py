@@ -56,7 +56,9 @@ class PallasDmaBackend(CollectiveBackend):
         world: int,
     ) -> jax.Array:
         from repro.kernels import dma_ring
+        from repro.obs import trace
 
-        return dma_ring.dma_ring_decode_mean(
-            payload.data["words"], payload.data["scale"], ef_axes, world
-        )
+        with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
+            return dma_ring.dma_ring_decode_mean(
+                payload.data["words"], payload.data["scale"], ef_axes, world
+            )

@@ -142,4 +142,7 @@ class RingBackend(CollectiveBackend):
         ef_axes: AxisNames,
         world: int,
     ) -> jax.Array:
-        return ring_decode_mean(comp, payload, bucket_size, ef_axes, world)
+        from repro.obs import trace
+
+        with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
+            return ring_decode_mean(comp, payload, bucket_size, ef_axes, world)

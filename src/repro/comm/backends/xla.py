@@ -15,6 +15,7 @@ from jax import lax
 from repro.comm import compressed
 from repro.comm.backends.base import CollectiveBackend
 from repro.core.compressors import Compressor
+from repro.obs import trace
 
 AxisNames = tuple[str, ...]
 
@@ -39,10 +40,12 @@ class XlaBackend(CollectiveBackend):
         ef_axes: AxisNames,
         world: int,
     ) -> jax.Array:
-        gathered = gather_payload(payload, ef_axes)
+        with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
+            gathered = gather_payload(payload, ef_axes)
         return compressed.decode_mean_buckets(comp, gathered, bucket_size)
 
     def gather_stack(
         self, payload: compressed.BucketPayload, ef_axes: AxisNames
     ) -> compressed.BucketPayload:
-        return gather_payload(payload, ef_axes)
+        with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
+            return gather_payload(payload, ef_axes)

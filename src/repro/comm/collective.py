@@ -61,6 +61,7 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import bucketize, compressed, robust
 from repro.core.aggregation import AggInfo
 from repro.core.compressors import Compressor, ScaledSignCompressor
+from repro.obs import telemetry as obs_telemetry
 from repro.utils import compat
 
 AxisNames = tuple[str, ...]
@@ -149,6 +150,7 @@ def build_bucketed_aggregator(
     *,
     byz_f: int = 0,
     backend=None,
+    telemetry: bool = False,
 ):
     """Build ``fn(buckets_w, err_w, srv_w, key) -> (agg, new_err_w, new_srv_w,
     info)`` where the ``_w`` pytrees carry a leading stacked EF-world axis
@@ -160,7 +162,11 @@ def build_bucketed_aggregator(
     resolved :class:`repro.comm.backends.CollectiveBackend` carrying the
     payload-mean transport (all-gather / ppermute ring / remote-DMA ring);
     ``None`` picks each strategy's historical default. ``byz_f`` is the
-    declared adversary budget handed to the robust strategies.
+    declared adversary budget handed to the robust strategies. ``telemetry``
+    adds a :class:`repro.obs.telemetry.Telemetry` aux output on
+    ``info.telemetry`` — pure reads of intermediates the body already
+    materializes, so the aggregated update / EF-residual trajectory is
+    bitwise-identical either way (pinned by tests/test_obs.py).
     """
     comp = comp or ScaledSignCompressor()
     if backend is None:
@@ -176,6 +182,11 @@ def build_bucketed_aggregator(
     def body(buckets, err, srv, key):
         outs, new_errs, new_srvs, dens = [], [], [], []
         wire_bits = 0.0
+        # telemetry accumulators — per dtype group bits / residual norms,
+        # per-lane robust filter weights. Pure reads; dead code when off.
+        grp_bits: list[float] = []
+        err_norms: list[jax.Array] = []
+        lane_w = jnp.zeros((w,), jnp.float32)
         widx = _worker_index(ef_axes)
         for gi, local in enumerate(zip(buckets, err if has_err else buckets)):
             b = local[0][0]  # (nb, bs) this worker's buckets for group gi
@@ -188,14 +199,18 @@ def build_bucketed_aggregator(
             if strategy == "dense":
                 outs.append(lax.pmean(b, ef_axes))
                 dens.append(jnp.float32(1.0))
+                err_norms.append(jnp.float32(0.0))
                 wire_bits += 2 * 32 * nb * bs  # fp32 ring all-reduce model
+                grp_bits.append(2 * 32 * nb * bs)
 
             elif strategy == "majority_vote":
                 s = jnp.where(b >= 0, 1.0, -1.0)
                 tot = lax.psum(s, ef_axes)
                 outs.append(jnp.where(tot >= 0, 1.0, -1.0) * masks[gi])
                 dens.append(jnp.float32(1.0))
+                err_norms.append(jnp.float32(0.0))
                 wire_bits += (w - 1) * nb * bs  # d bits per peer payload
+                grp_bits.append((w - 1) * nb * bs)
 
             elif strategy in ("ef_allgather", "ef_ring") or strategy in robust.ROBUST_STRATEGIES:
                 payload, ne, d_b = compressed.ef_encode_buckets(
@@ -205,15 +220,24 @@ def build_bucketed_aggregator(
                     # same payloads, same wire bill — robustness is decode-side,
                     # which is why it needs the backend's full gathered stack
                     gathered = backend.gather_stack(payload, ef_axes)
-                    outs.append(robust.robust_combine(strategy, comp, gathered, bs, byz_f))
+                    if telemetry and byz_f:
+                        # decode the stack once, feed both the combine and the
+                        # per-lane filter weights — same ops as robust_combine
+                        stack = compressed.decode_buckets_stack(comp, gathered, bs)
+                        outs.append(robust.combine_stack(strategy, stack, byz_f))
+                        lane_w = lane_w + robust.filtered_lane_weights(strategy, stack, byz_f)
+                    else:
+                        outs.append(robust.robust_combine(strategy, comp, gathered, bs, byz_f))
                 else:
                     # the payload-mean exchange: the one point where the
                     # transport (all-gather / ppermute / remote DMA) differs
                     outs.append(backend.decode_mean(comp, payload, bs, ef_axes, w))
                 new_errs.append(ne[None])
                 dens.append(jnp.mean(d_b))
+                err_norms.append(obs_telemetry.residual_l2(ne))
                 # every backend moves the same (w−1)·nb payloads per device
                 wire_bits += (w - 1) * nb * bucket_bits
+                grp_bits.append((w - 1) * nb * bucket_bits)
 
             else:  # ef_alltoall — double compression over bucket shards
                 nbw = compressed.server_shard_buckets(nb, w)
@@ -222,6 +246,7 @@ def build_bucketed_aggregator(
                 payload, ne, d_b = compressed.ef_encode_buckets(comp, bp, ep, mask=mp)
                 new_errs.append(ne[:nb][None])
                 dens.append(jnp.mean(d_b[:nb]))
+                err_norms.append(obs_telemetry.residual_l2(ne[:nb]))
                 # route shard j of every worker's stream to worker j
                 shards = jax.tree.map(lambda x: x.reshape(w, nbw, *x.shape[1:]), payload)
                 routed = jax.tree.map(
@@ -241,10 +266,21 @@ def build_bucketed_aggregator(
                 outs.append(full[:nb])
                 # a2a: recv (w−1) shards of nbw payloads; ag: recv (w−1) more
                 wire_bits += 2 * (w - 1) * nbw * bucket_bits
+                grp_bits.append(2 * (w - 1) * nbw * bucket_bits)
 
+        tele = None
+        if telemetry:
+            tele = obs_telemetry.Telemetry(
+                err_l2=lax.pmean(jnp.stack(err_norms), ef_axes),
+                density=lax.pmean(jnp.stack(dens), ef_axes),
+                wire_bytes=jnp.float32(wire_bits / 8.0),
+                group_bytes=jnp.asarray(grp_bits, jnp.float32) / 8.0,
+                filtered_lanes=lane_w,
+            )
         info = AggInfo(
             wire_bytes_per_device=jnp.float32(wire_bits / 8.0),
             mean_density=lax.pmean(jnp.mean(jnp.stack(dens)), ef_axes),
+            telemetry=tele,
         )
         return (
             tuple(outs),
@@ -265,7 +301,11 @@ def build_bucketed_aggregator(
         tuple(P() for _ in range(n_groups)),
         stacked if has_err else (),
         stacked if has_srv else (),
-        AggInfo(wire_bytes_per_device=P(), mean_density=P()),
+        AggInfo(
+            wire_bytes_per_device=P(),
+            mean_density=P(),
+            telemetry=obs_telemetry.replicated_specs() if telemetry else None,
+        ),
     )
     return compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, manual_axes=None

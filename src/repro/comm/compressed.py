@@ -34,6 +34,7 @@ from repro.core.compressors import (
     density,
 )
 from repro.kernels import ops
+from repro.obs import trace
 
 _SIGN_TYPES = (ScaledSignCompressor, UnscaledSignCompressor)
 
@@ -95,36 +96,38 @@ def ef_encode_buckets(
     encode draws bit-identical randomness to the one-shot encode.
     """
     nb, bs = buckets.shape
-    if _is_sign(comp):
-        fixed = None if isinstance(comp, ScaledSignCompressor) else comp.scale
-        words, scales, new_err, dens = ops.ef_sign_bucket_step(buckets, err, fixed_scale=fixed)
-        payload = BucketPayload(data={"words": words, "scale": scales})
-    else:
-        p = buckets + err
-        dens = jax.vmap(density)(p)
-        if keys is None:
-            if key is not None and not comp.deterministic:
-                keys = jax.random.split(key, nb)
-            else:
-                keys = jnp.zeros((nb, 2), jnp.uint32)
+    with trace.span(trace.SPAN_COMPRESS):
+        if _is_sign(comp):
+            fixed = None if isinstance(comp, ScaledSignCompressor) else comp.scale
+            words, scales, new_err, dens = ops.ef_sign_bucket_step(buckets, err, fixed_scale=fixed)
+            payload = BucketPayload(data={"words": words, "scale": scales})
+        else:
+            p = buckets + err
+            dens = jax.vmap(density)(p)
+            if keys is None:
+                if key is not None and not comp.deterministic:
+                    keys = jax.random.split(key, nb)
+                else:
+                    keys = jnp.zeros((nb, 2), jnp.uint32)
 
-        def one(pb, kb):
-            pay = comp.compress(pb, key=kb if not comp.deterministic else None)
-            return pay, comp.decompress(pay, bs)
+            def one(pb, kb):
+                pay = comp.compress(pb, key=kb if not comp.deterministic else None)
+                return pay, comp.decompress(pay, bs)
 
-        payload_data, delta = jax.vmap(one)(p, keys)
-        payload = BucketPayload(data=payload_data)
-        new_err = p - delta
-    if mask is not None:
-        new_err = new_err * mask
-    return payload, new_err, dens
+            payload_data, delta = jax.vmap(one)(p, keys)
+            payload = BucketPayload(data=payload_data)
+            new_err = p - delta
+        if mask is not None:
+            new_err = new_err * mask
+        return payload, new_err, dens
 
 
 def decode_buckets(comp: Compressor, payload: BucketPayload, bucket_size: int) -> jax.Array:
     """payload → (n_buckets, bucket_size) fp32 reconstruction."""
-    if _is_sign(comp):
-        return ops.bucket_sign_decode(payload.data["words"], payload.data["scale"], bucket_size)
-    return jax.vmap(lambda pay: comp.decompress(pay, bucket_size))(payload.data)
+    with trace.span(trace.SPAN_DECODE):
+        if _is_sign(comp):
+            return ops.bucket_sign_decode(payload.data["words"], payload.data["scale"], bucket_size)
+        return jax.vmap(lambda pay: comp.decompress(pay, bucket_size))(payload.data)
 
 
 def decode_buckets_stack(comp: Compressor, gathered: BucketPayload, bucket_size: int) -> jax.Array:
@@ -147,14 +150,17 @@ def decode_mean_buckets(comp: Compressor, gathered: BucketPayload, bucket_size: 
     ``gathered`` leaves carry a leading (W,) axis; returns (n_buckets,
     bucket_size) fp32 — the all-gather decode hot loop of dist-EF-SGD.
     """
-    if _is_sign(comp):
-        return ops.bucket_decompress_mean(gathered.data["words"], gathered.data["scale"])
-    w = jax.tree.leaves(gathered.data)[0].shape[0]
+    with trace.span(trace.SPAN_DECODE):
+        if _is_sign(comp):
+            return ops.bucket_decompress_mean(gathered.data["words"], gathered.data["scale"])
+        w = jax.tree.leaves(gathered.data)[0].shape[0]
 
-    def body(i, acc):
-        pay = jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, False), gathered.data)
-        return acc + decode_buckets(comp, BucketPayload(data=pay), bucket_size)
+        def body(i, acc):
+            pay = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, False), gathered.data
+            )
+            return acc + decode_buckets(comp, BucketPayload(data=pay), bucket_size)
 
-    nb = jax.tree.leaves(gathered.data)[0].shape[1]
-    acc = jax.lax.fori_loop(0, w, body, jnp.zeros((nb, bucket_size), jnp.float32))
-    return acc / w
+        nb = jax.tree.leaves(gathered.data)[0].shape[1]
+        acc = jax.lax.fori_loop(0, w, body, jnp.zeros((nb, bucket_size), jnp.float32))
+        return acc / w

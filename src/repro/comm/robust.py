@@ -107,6 +107,54 @@ def norm_filtered_mean(stack: jax.Array, f: int) -> jax.Array:
     return jnp.sum(stack * keep, axis=0) / (w - f)
 
 
+def combine_stack(strategy: str, stack: jax.Array, byz_f: int) -> jax.Array:
+    """Apply one robust estimator to an already-decoded (W, nb, bs) stack.
+
+    The decode-side half of :func:`robust_combine`, split out so a caller
+    that needs the stack for other reads (telemetry's per-lane filter
+    weights) can decode once and reuse it.
+    """
+    if strategy == "ef_coord_median":
+        return coord_median(stack)
+    if strategy == "ef_trimmed_mean":
+        return trimmed_mean(stack, byz_f)
+    if strategy == "ef_norm_filter":
+        return norm_filtered_mean(stack, byz_f)
+    raise ValueError(f"unknown robust strategy {strategy!r}; options: {ROBUST_STRATEGIES}")
+
+
+def filtered_lane_weights(strategy: str, stack: jax.Array, byz_f: int) -> jax.Array:
+    """Per-worker drop weight in [0, 1] for one robust combine of ``stack``.
+
+    Exact with respect to what the estimator actually discards:
+
+    * ``ef_norm_filter`` — 1.0 for the ``f`` lanes the (stable-argsort)
+      filter dropped, 0.0 for survivors; recomputes the same center/distance/
+      order values as :func:`norm_filtered_mean` so XLA CSE shares them.
+    * ``ef_trimmed_mean`` — the fraction of this lane's coordinates that fell
+      in the trimmed order-statistic ranks (``< f`` or ``>= W - f`` under the
+      same stable sort the mean uses).
+    * ``ef_coord_median`` (or ``byz_f == 0``) — zeros: the median has no
+      discrete drop set to attribute.
+    """
+    w = stack.shape[0]
+    if byz_f == 0 or strategy == "ef_coord_median":
+        return jnp.zeros((w,), jnp.float32)
+    if strategy == "ef_trimmed_mean":
+        ranks = jnp.argsort(jnp.argsort(stack, axis=0), axis=0)
+        dropped = (ranks < byz_f) | (ranks >= w - byz_f)
+        return jnp.mean(
+            dropped.astype(jnp.float32), axis=tuple(range(1, stack.ndim))
+        )
+    if strategy == "ef_norm_filter":
+        center = coord_median(stack)
+        d2 = jnp.sum((stack - center[None]) ** 2, axis=tuple(range(1, stack.ndim)))
+        order = jnp.argsort(d2)
+        keep = jnp.zeros((w,), jnp.float32).at[order[: w - byz_f]].set(1.0)
+        return 1.0 - keep
+    raise ValueError(f"unknown robust strategy {strategy!r}; options: {ROBUST_STRATEGIES}")
+
+
 def robust_combine(
     strategy: str,
     comp: Compressor,
@@ -124,10 +172,4 @@ def robust_combine(
     if byz_f == 0:
         return compressed.decode_mean_buckets(comp, gathered, bucket_size)
     stack = compressed.decode_buckets_stack(comp, gathered, bucket_size)
-    if strategy == "ef_coord_median":
-        return coord_median(stack)
-    if strategy == "ef_trimmed_mean":
-        return trimmed_mean(stack, byz_f)
-    if strategy == "ef_norm_filter":
-        return norm_filtered_mean(stack, byz_f)
-    raise ValueError(f"unknown robust strategy {strategy!r}; options: {ROBUST_STRATEGIES}")
+    return combine_stack(strategy, stack, byz_f)

@@ -75,6 +75,10 @@ _SIGN_TYPES = (ScaledSignCompressor, UnscaledSignCompressor)
 class AggInfo(NamedTuple):
     wire_bytes_per_device: jax.Array  # what this device receives per step
     mean_density: jax.Array  # mean φ(p) over leaves (Lemma 8 quality)
+    # repro.obs.telemetry.Telemetry when CommSpec.telemetry="full"; the None
+    # default is an EMPTY pytree child, so off-mode AggInfo has the same two
+    # leaves (and the same shard_map out_specs) it always had
+    telemetry: Any = None
 
 
 def info_dict(info: AggInfo) -> dict[str, float]:

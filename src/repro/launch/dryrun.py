@@ -99,6 +99,7 @@ def lower_combo(
     t0 = time.time()
     key = jax.random.PRNGKey(0)
 
+    obs_meta = None
     if shape.kind == "train":
         # EF residuals in bf16 for bf16-param configs (DESIGN.md §8.3)
         err_dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
@@ -120,6 +121,21 @@ def lower_combo(
             ef_axes=ef_axes, batch_example=batch_abs, state_example=state_abs,
         )
         args = (state_abs, batch_abs)
+        # what a real (bucketed) run of this combo will record: the telemetry
+        # field table and each strategy's exact per-device wire bill at the
+        # default bucket size — the dry run documents the run-record contract
+        from repro.comm import bucketize as comm_bucketize
+        from repro.comm import collective as comm_collective
+        from repro.obs import telemetry as obs_telemetry
+
+        layout = comm_bucketize.build_layout(state_abs.params, comm_bucketize.DEFAULT_BUCKET_SIZE)
+        world = comm_collective.world_size(mesh, ef_axes) if ef_axes else 1
+        obs_meta = {
+            "telemetry_fields": list(obs_telemetry.telemetry_schema()),
+            "ef_world": world,
+            "bucket_size": comm_bucketize.DEFAULT_BUCKET_SIZE,
+            "wire_models": obs_telemetry.strategy_wire_models(layout, world),
+        }
     elif shape.kind == "prefill":
         from repro.models import transformer
 
@@ -196,6 +212,8 @@ def lower_combo(
     }
     dom = max(rec["roofline"], key=lambda k: rec["roofline"][k])
     rec["roofline"]["dominant"] = dom
+    if obs_meta is not None:
+        rec["obs"] = obs_meta
     if keep_hlo:
         rec["hlo_ops"] = hlo_util.op_histogram(hlo_text)
         rec["_hlo_text"] = hlo_text
@@ -253,6 +271,19 @@ def main():
                         f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
                         flush=True,
                     )
+                    if "obs" in rec:
+                        ob = rec["obs"]
+                        fields = ",".join(f["name"] for f in ob["telemetry_fields"])
+                        models = " ".join(
+                            f"{s}={b / 2**20:.1f}MiB"
+                            for s, b in sorted(ob["wire_models"].items())
+                        )
+                        print(f"  obs: telemetry fields [{fields}]", flush=True)
+                        print(
+                            f"  obs: wire/step/device @W={ob['ef_world']} "
+                            f"bs={ob['bucket_size']}: {models}",
+                            flush=True,
+                        )
                     n_ok += 1
                 except Exception as e:
                     n_fail += 1

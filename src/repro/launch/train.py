@@ -25,6 +25,8 @@ from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
 from repro.configs import get_config, reduced as make_reduced
 from repro.configs.base import BYZ_ATTACKS, ByzConfig, OverlapConfig
 from repro.launch.mesh import make_host_mesh
+from repro.obs import sink as obs_sink
+from repro.obs.telemetry import TELEMETRY_CHOICES
 from repro.train.loop import TrainJob, run_training
 
 
@@ -85,6 +87,17 @@ def main():
         "--byz-scale", type=float, default=None,
         help="attack magnitude for scaled_noise / const_drift (default 10.0)",
     )
+    ap.add_argument(
+        "--telemetry", default="off", choices=list(TELEMETRY_CHOICES),
+        help="in-graph telemetry level (repro.obs): 'full' records per-group "
+        "EF-residual norms, densities and exact wire bytes each logged step; "
+        "'off' compiles to the exact untelemetered program",
+    )
+    ap.add_argument(
+        "--log-dir", default="",
+        help="write a schema-versioned run.jsonl of run records here "
+        "(summarize with `python -m repro.obs report <file>`)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -102,6 +115,7 @@ def main():
         backend=args.backend,
         overlap=OverlapConfig.from_args(args.overlap, args.overlap_groups),
         byz=ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f, args.byz_scale),
+        telemetry=args.telemetry,
     ).validate()  # reject bad flag combinations before any compile
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,
@@ -110,9 +124,15 @@ def main():
         policy=args.policy, seed=args.seed,
         microbatches=args.microbatches, comm=spec,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        log_dir=args.log_dir,
     )
     _, history = run_training(job, log_fn=lambda r: print(json.dumps(r), flush=True))
-    print(f"final_loss={history[-1]['loss']:.4f}")
+    # epilogue from the unconditional final record — history[-1] raised
+    # IndexError on zero-step runs
+    final = obs_sink.final_record(history, steps=args.steps)
+    print(json.dumps(final), flush=True)
+    fl = final["final_loss"]
+    print(f"final_loss={fl:.4f}" if fl is not None else "final_loss=nan")
 
 
 if __name__ == "__main__":

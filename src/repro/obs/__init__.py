@@ -1,0 +1,38 @@
+"""repro.obs — observability for every gradient exchange.
+
+Three layers: in-graph :class:`~repro.obs.telemetry.Telemetry` (aux output
+of the aggregators behind ``CommSpec.telemetry``), trace spans
+(:mod:`repro.obs.trace`), and JSONL run records + report CLI
+(:mod:`repro.obs.sink`, :mod:`repro.obs.report`,
+``python -m repro.obs report``).
+
+Only the jax-only layers are imported eagerly — ``repro.comm.collective``
+imports this package at module scope, so pulling sink/report (which reach
+back into comm/overlap) here would create a cycle.
+"""
+
+from repro.obs.telemetry import (
+    TELEMETRY_CHOICES,
+    Telemetry,
+    modeled_wire_bytes,
+    replicated_specs,
+    residual_l2,
+    strategy_wire_models,
+    telemetry_schema,
+)
+from repro.obs.trace import SPAN_NAMES, WallTimers, host_span, span, step_span
+
+__all__ = [
+    "TELEMETRY_CHOICES",
+    "Telemetry",
+    "modeled_wire_bytes",
+    "replicated_specs",
+    "residual_l2",
+    "strategy_wire_models",
+    "telemetry_schema",
+    "SPAN_NAMES",
+    "WallTimers",
+    "host_span",
+    "span",
+    "step_span",
+]

@@ -1,0 +1,26 @@
+"""``python -m repro.obs <subcommand>`` — observability CLI.
+
+Currently one subcommand: ``report run.jsonl`` (see :mod:`repro.obs.report`).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or argv[0] in ("-h", "--help"):
+        print("usage: python -m repro.obs report <run.jsonl> [--json]")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "report":
+        from repro.obs.report import main as report_main
+
+        return report_main(rest)
+    print(f"unknown subcommand {cmd!r}; expected 'report'", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

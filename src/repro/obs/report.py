@@ -1,0 +1,188 @@
+"""``python -m repro.obs report run.jsonl`` — summarize a run record file.
+
+Reads a schema-v1 JSONL run (see :mod:`repro.obs.sink`), then reports:
+
+* loss trajectory (first/last logged step),
+* wire accounting — and whether the recorded per-step bytes match the
+  analytic model the run_meta declared (they must, exactly: the in-graph
+  counter and :func:`repro.obs.telemetry.modeled_wire_bytes` implement the
+  same sum),
+* density drift and EF-residual growth over the run,
+* comm exposure under the proportional-split pipeline model when the
+  records carry per-group bytes and wall timers,
+* anomaly flags: residual-norm blow-up (the undeclared-Byzantine signature
+  — 1901.09847 predicts bounded ``||e_t||`` under honest workers),
+  density collapse/drift, wire-model mismatch, and robust-decode lanes
+  drawing persistent filtering suspicion.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Any
+
+from repro.obs.sink import read_run
+
+# anomaly thresholds (heuristic, documented in the README table)
+RESIDUAL_BLOWUP_RATIO = 10.0  # late-run mean / early-run mean
+DENSITY_DRIFT_RATIO = 0.5  # late-run mean below half the early-run mean
+SUSPECT_LANE_FRAC = 0.5  # lane filtered in more than half its combines
+
+
+def _mean(xs) -> float:
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else float("nan")
+
+
+def _halves(series: list[float]) -> tuple[float, float]:
+    """(early mean, late mean) over the first/last half of a series."""
+    if not series:
+        return float("nan"), float("nan")
+    mid = max(1, len(series) // 2)
+    return _mean(series[:mid]), _mean(series[mid:])
+
+
+def summarize(records: list[dict[str, Any]]) -> dict[str, Any]:
+    """Reduce a parsed run to the report dict (pure; rendering separate)."""
+    meta = next((r for r in records if r.get("kind") == "run_meta"), None)
+    steps = [r for r in records if r.get("kind") == "step"]
+    final = next((r for r in records if r.get("kind") == "final"), None)
+
+    out: dict[str, Any] = {
+        "n_step_records": len(steps),
+        "config": (meta or {}).get("config", {}),
+        "telemetry": (meta or {}).get("telemetry", "off"),
+        "final_loss": (final or {}).get("final_loss"),
+        "anomalies": [],
+    }
+
+    losses = [r["loss"] for r in steps if "loss" in r]
+    if losses:
+        out["loss"] = {"first": losses[0], "last": losses[-1]}
+        if not all(math.isfinite(x) for x in losses):
+            out["anomalies"].append("nonfinite_loss")
+
+    # --- wire accounting vs the declared analytic model (exact match) -----
+    wires = [r["wire_bytes"] for r in steps if "wire_bytes" in r]
+    if wires:
+        out["wire_bytes_per_step"] = wires[-1]
+        modeled = (meta or {}).get("modeled_wire_bytes")
+        if modeled is not None:
+            out["modeled_wire_bytes"] = modeled
+            if any(wb != modeled for wb in wires):
+                out["anomalies"].append("wire_model_mismatch")
+
+    # --- density drift ----------------------------------------------------
+    dens = [r["density"] for r in steps if "density" in r]
+    if dens:
+        early, late = _halves(dens)
+        out["density"] = {"first": dens[0], "last": dens[-1], "early": early, "late": late}
+        if any(not (0.0 <= d <= 1.0) for d in dens):
+            out["anomalies"].append("density_out_of_unit")
+        elif late < early * DENSITY_DRIFT_RATIO:
+            out["anomalies"].append("density_drift")
+
+    # --- EF-residual growth (telemetry="full" runs only) ------------------
+    res = [sum(r["err_l2"]) for r in steps if "err_l2" in r]
+    if res:
+        early, late = _halves(res)
+        out["err_l2"] = {"first": res[0], "last": res[-1], "early": early, "late": late}
+        if not all(math.isfinite(x) for x in res):
+            out["anomalies"].append("residual_nonfinite")
+        elif early > 0 and late > early * RESIDUAL_BLOWUP_RATIO:
+            out["anomalies"].append("residual_blowup")
+
+    # --- robust-decode lane suspicion -------------------------------------
+    lane_runs = [r["filtered_lanes"] for r in steps if "filtered_lanes" in r]
+    if lane_runs and any(any(x > 0 for x in lanes) for lanes in lane_runs):
+        totals = [sum(col) for col in zip(*lane_runs)]
+        out["filtered_lane_totals"] = totals
+        denom = sum(totals)
+        suspects = [
+            i for i, t in enumerate(totals) if denom and t / denom > SUSPECT_LANE_FRAC
+        ]
+        if suspects:
+            out["suspect_lanes"] = suspects
+            out["anomalies"].append("suspect_lanes")
+
+    # --- comm exposure under the proportional pipeline model --------------
+    gb = next((r["group_bytes"] for r in reversed(steps) if "group_bytes" in r), None)
+    wall = next((r.get("wall_step_s") for r in reversed(steps) if "wall_step_s" in r), None)
+    if gb and len(gb) > 1 and sum(gb) > 0 and wall:
+        from repro.overlap.pipeline import proportional_exposure  # lazy: heavy deps
+
+        from repro.core.aggregation import REF_WIRE_BYTES_PER_US
+
+        serial_us = sum(gb) / REF_WIRE_BYTES_PER_US
+        out["comm_exposure"] = proportional_exposure(gb, wall * 1e6, serial_us)
+
+    return out
+
+
+def format_summary(summary: dict[str, Any]) -> str:
+    """Human-readable rendering of :func:`summarize`."""
+    lines = []
+    cfg = summary.get("config", {})
+    head = " ".join(f"{k}={cfg[k]}" for k in sorted(cfg)) or "(no run_meta)"
+    lines.append(f"run: {head}")
+    lines.append(
+        f"telemetry={summary['telemetry']} step_records={summary['n_step_records']}"
+    )
+    if "loss" in summary:
+        ls = summary["loss"]
+        fl = summary.get("final_loss")
+        lines.append(
+            f"loss: first={ls['first']:.4f} last={ls['last']:.4f}"
+            + (f" final={fl:.4f}" if fl is not None else "")
+        )
+    if "wire_bytes_per_step" in summary:
+        line = f"wire: {summary['wire_bytes_per_step']:.0f} B/step/device"
+        if "modeled_wire_bytes" in summary:
+            ok = "wire_model_mismatch" not in summary["anomalies"]
+            line += f" (model {summary['modeled_wire_bytes']:.0f} B — {'match' if ok else 'MISMATCH'})"
+        lines.append(line)
+    if "density" in summary:
+        d = summary["density"]
+        lines.append(f"density: first={d['first']:.4f} last={d['last']:.4f}")
+    if "err_l2" in summary:
+        e = summary["err_l2"]
+        lines.append(
+            f"ef-residual L2: first={e['first']:.4g} last={e['last']:.4g} "
+            f"(early-half mean {e['early']:.4g} → late-half mean {e['late']:.4g})"
+        )
+    if "filtered_lane_totals" in summary:
+        tot = ", ".join(f"{t:.2f}" for t in summary["filtered_lane_totals"])
+        lines.append(f"robust filtering per lane: [{tot}]")
+    if "comm_exposure" in summary:
+        ex = summary["comm_exposure"]
+        lines.append(
+            f"comm exposure (proportional model): {ex['exposure_frac']:.1%} of "
+            f"{ex['serial_comm_us']:.0f} us serial bill exposed"
+        )
+    anomalies = summary.get("anomalies", [])
+    lines.append("anomalies: " + (", ".join(anomalies) if anomalies else "none"))
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs report", description="summarize a run.jsonl"
+    )
+    ap.add_argument("path", help="run record file written via --log-dir")
+    ap.add_argument("--json", action="store_true", help="emit the summary as JSON")
+    args = ap.parse_args(argv)
+    summary = summarize(read_run(args.path))
+    if args.json:
+        print(json.dumps(summary))
+    else:
+        print(format_summary(summary))
+    # anomalies are informational, not a failure — exit 0 either way so the
+    # CLI composes into pipelines that inspect the JSON
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,147 @@
+"""Schema-versioned JSONL run records.
+
+One training run → one ``run.jsonl``: a ``run_meta`` line, one ``step``
+line per logged step, and a ``final`` line emitted unconditionally (even
+for zero-step runs — the ``history[-1]`` epilogue crash this replaces).
+Records are plain JSON objects with a ``kind`` discriminator and a
+``schema`` version so ``repro.obs report`` (and anything downstream) can
+refuse files it does not understand instead of misreading them.
+
+Schema v1:
+
+``run_meta``  schema, kind, config {strategy, backend, world, steps, ...},
+              telemetry level, modeled wire bytes (when bucketed), and the
+              telemetry field table from :mod:`repro.obs.telemetry`.
+``step``      step, loss, wire_bytes, density, wall-clock regions, plus the
+              flattened :class:`Telemetry` fields when the level is "full".
+``final``     steps completed, final_loss (null when no steps ran),
+              total wall seconds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, TextIO
+
+SCHEMA_VERSION = 1
+
+
+def run_meta(
+    *,
+    config: dict[str, Any],
+    telemetry: str,
+    modeled_wire_bytes: float | None = None,
+    wire_models: dict[str, float] | None = None,
+) -> dict[str, Any]:
+    """The run-header record: what this run is and what it will log."""
+    from repro.obs.telemetry import telemetry_schema
+
+    rec: dict[str, Any] = {
+        "schema": SCHEMA_VERSION,
+        "kind": "run_meta",
+        "telemetry": telemetry,
+        "config": dict(config),
+    }
+    if modeled_wire_bytes is not None:
+        rec["modeled_wire_bytes"] = float(modeled_wire_bytes)
+    if wire_models is not None:
+        rec["wire_models"] = {k: float(v) for k, v in wire_models.items()}
+    if telemetry != "off":
+        rec["telemetry_fields"] = list(telemetry_schema())
+    return rec
+
+
+def step_record(
+    step: int,
+    metrics: dict[str, Any],
+    *,
+    walls: dict[str, float] | None = None,
+) -> dict[str, Any]:
+    """One logged step. ``metrics`` is the host-side metrics dict from the
+    train step (``loss``/``wire_bytes``/``density`` floats, plus an ``obs``
+    :class:`~repro.obs.telemetry.Telemetry` when the level is "full", which
+    is flattened into scalar-list fields here)."""
+    from repro.obs.telemetry import to_host
+
+    rec: dict[str, Any] = {"schema": SCHEMA_VERSION, "kind": "step", "step": int(step)}
+    for k, v in metrics.items():
+        if k == "obs":
+            if v is not None:
+                rec.update(to_host(v))
+        else:
+            rec[k] = float(v)
+    for name, s in (walls or {}).items():
+        rec[f"wall_{name}_s"] = float(s)
+    return rec
+
+
+def final_record(
+    history: list[dict[str, Any]],
+    *,
+    steps: int,
+    wall_s: float | None = None,
+) -> dict[str, Any]:
+    """The unconditional run epilogue. ``final_loss`` is read from the last
+    history record when one exists and is ``None`` otherwise — callers print
+    from this record instead of indexing ``history[-1]`` (which raises
+    IndexError on zero-step runs)."""
+    last = history[-1] if history else None
+    rec: dict[str, Any] = {
+        "schema": SCHEMA_VERSION,
+        "kind": "final",
+        "steps": int(steps),
+        "final_loss": (float(last["loss"]) if last and "loss" in last else None),
+    }
+    if last and "step" in last:
+        rec["last_logged_step"] = int(last["step"])
+    if wall_s is not None:
+        rec["wall_s"] = float(wall_s)
+    return rec
+
+
+class RunRecordWriter:
+    """Append-only JSONL writer; one line per record, flushed per write so a
+    crashed run still leaves a readable prefix."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._fh: TextIO | None = open(path, "w")
+
+    def write(self, record: dict[str, Any]) -> None:
+        if self._fh is None:
+            raise ValueError(f"writer for {self.path} is closed")
+        self._fh.write(json.dumps(record) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "RunRecordWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_run(path: str) -> list[dict[str, Any]]:
+    """Parse a run.jsonl, validating the schema version of every record."""
+    records = []
+    with open(path) as fh:
+        for ln, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            ver = rec.get("schema")
+            if ver != SCHEMA_VERSION:
+                raise ValueError(
+                    f"{path}:{ln}: schema {ver!r} (this reader understands "
+                    f"{SCHEMA_VERSION}) — regenerate the run or upgrade repro"
+                )
+            records.append(rec)
+    return records

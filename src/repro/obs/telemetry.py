@@ -1,0 +1,180 @@
+"""In-graph telemetry: the :class:`Telemetry` pytree and its metric reducers.
+
+The paper's central quantities — the EF residual ``e_t`` that absorbs
+compression error (Karimireddy et al., 1901.09847), the sign-compression
+density φ, and the bytes the wire actually moves — are all values the
+bucketed aggregator *already materializes* while it runs. ``Telemetry`` is a
+pure read of those intermediates, returned as an aux output of the
+aggregator (``AggInfo.telemetry``) behind ``CommSpec.telemetry``:
+
+``off``   the field is ``None`` — an EMPTY pytree, so the aggregator's
+          output structure carries zero extra leaves and the compiled
+          program is exactly today's (the bitwise-invariance tests pin it).
+``full``  one fixed-shape :class:`Telemetry` per step.
+
+The shape of every field is static per spec, which is what lets
+``train/steps.py`` thread it through ``jit`` out-shardings unchanged from
+step to step and the JSONL sink (:mod:`repro.obs.sink`) write schema-stable
+records.
+
+This module deliberately imports nothing from :mod:`repro.comm` at module
+scope — ``comm.collective`` imports it for the reducers, so the wire-model
+helpers defer their strategy-table lookups to call time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compressors import Compressor, ScaledSignCompressor
+
+#: accepted values of ``CommSpec.telemetry``
+TELEMETRY_CHOICES = ("off", "full")
+
+
+class Telemetry(NamedTuple):
+    """Per-step in-graph telemetry of one gradient exchange.
+
+    Every leaf is replicated across the mesh (out-spec ``P()``); worker-local
+    quantities (residual norms, densities) are ``pmean``\\ ed over the EF axes
+    inside the aggregator so the record is one number per group, not per
+    worker.
+    """
+
+    err_l2: jax.Array  # (n_dtype_groups,) f32 — EF-residual L2 per group
+    density: jax.Array  # (n_dtype_groups,) f32 — compressed density φ per group
+    wire_bytes: jax.Array  # () f32 — bytes this device received this step
+    group_bytes: jax.Array  # (n_units,) f32 — wire split per exchange unit
+    filtered_lanes: jax.Array  # (world,) f32 — robust-decode drop weight per lane
+
+
+#: the schema behind every ``Telemetry`` instance and its JSONL spelling —
+#: rendered by ``launch/dryrun.py`` and the README's Observability table
+TELEMETRY_FIELDS = (
+    {
+        "name": "err_l2",
+        "shape": "(n_dtype_groups,)",
+        "unit": "l2-norm",
+        "doc": "EF-residual L2 per dtype bucket group, pmean over EF workers "
+        "(the paper's bounded ||e_t||; blow-up flags a diverging exchange)",
+    },
+    {
+        "name": "density",
+        "shape": "(n_dtype_groups,)",
+        "unit": "fraction",
+        "doc": "compressed density φ(p) per dtype bucket group from the fused "
+        "bucket-stats pass (Lemma 8 quality), pmean over EF workers",
+    },
+    {
+        "name": "wire_bytes",
+        "shape": "()",
+        "unit": "bytes",
+        "doc": "bytes received per device this step — equals the analytic "
+        "model in core.aggregation exactly (the report CLI cross-checks)",
+    },
+    {
+        "name": "group_bytes",
+        "shape": "(n_units,)",
+        "unit": "bytes",
+        "doc": "wire_bytes split per exchange unit: per dtype group on the "
+        "one-shot path, per schedule group on the overlap pipeline (feeds "
+        "the comm-exposure model)",
+    },
+    {
+        "name": "filtered_lanes",
+        "shape": "(world,)",
+        "unit": "combines",
+        "doc": "robust-decode drop weight per EF-worker lane, summed over "
+        "this step's combines (norm-filter: 0/1 per group; trimmed-mean: "
+        "fraction of coordinates trimmed; zeros when not filtering)",
+    },
+)
+
+
+def telemetry_schema() -> tuple[dict, ...]:
+    """The field table every ``telemetry="full"`` record follows."""
+    return TELEMETRY_FIELDS
+
+
+def replicated_specs() -> Telemetry:
+    """``shard_map``/``jit`` out-spec tree: every telemetry leaf replicated."""
+    return Telemetry(P(), P(), P(), P(), P())
+
+
+def residual_l2(err: jax.Array) -> jax.Array:
+    """Scalar L2 norm of one group's EF residual — finite, >= 0."""
+    return jnp.sqrt(jnp.sum(jnp.square(err.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# analytic wire models (must mirror the in-graph accounting exactly)
+# ---------------------------------------------------------------------------
+
+
+def modeled_wire_bytes(
+    strategy: str, layout, world: int, comp: Compressor | None = None
+) -> float:
+    """Bytes per device per step the aggregator will bill for ``strategy``.
+
+    Mirrors the in-graph accounting of ``comm.collective`` term for term —
+    per dtype group, with ``ef_alltoall``'s per-group ceil-divided server
+    shards (a sum of ceils, NOT a ceil of the sum) — so a run record's
+    ``wire_bytes`` matches this number *exactly*, which the report CLI and
+    the property tests both gate. For the sign family this reduces to the
+    closed forms in :mod:`repro.core.aggregation`.
+    """
+    from repro.comm import collective, compressed  # deferred: collective imports us
+
+    if strategy not in collective.STRATEGIES:
+        raise ValueError(
+            f"unknown bucketed strategy {strategy!r}; options: {collective.STRATEGIES}"
+        )
+    comp = comp or ScaledSignCompressor()
+    bs = layout.bucket_size
+    bucket_bits = comp.wire_bits(bs)
+    bits = 0.0
+    for g in layout.groups:
+        nb = g.n_buckets
+        if strategy == "dense":
+            bits += 2 * 32 * nb * bs  # fp32 ring all-reduce model
+        elif strategy == "majority_vote":
+            bits += (world - 1) * nb * bs  # d bits per peer payload
+        elif strategy == "ef_alltoall":
+            nbw = compressed.server_shard_buckets(nb, world)
+            bits += 2 * (world - 1) * nbw * bucket_bits
+        else:  # mean family + the robust variants: identical wire bill
+            bits += (world - 1) * nb * bucket_bits
+    return bits / 8.0
+
+
+def strategy_wire_models(
+    layout, world: int, comp: Compressor | None = None
+) -> dict[str, float]:
+    """``{strategy: modeled bytes/step/device}`` for every bucketed strategy
+    — what ``launch/dryrun.py`` prints alongside the spec dump."""
+    from repro.comm import collective  # deferred: collective imports us
+
+    return {
+        s: modeled_wire_bytes(s, layout, world, comp) for s in collective.STRATEGIES
+    }
+
+
+def to_host(t: Telemetry) -> dict[str, Any]:
+    """Pull one step's telemetry off-device into JSON-serializable fields.
+
+    The one place traced telemetry crosses to host records (the counterpart
+    of ``core.aggregation.info_dict`` for the extended schema).
+    """
+    import numpy as np
+
+    return {
+        "err_l2": [float(x) for x in np.asarray(t.err_l2)],
+        "group_density": [float(x) for x in np.asarray(t.density)],
+        "group_bytes": [float(x) for x in np.asarray(t.group_bytes)],
+        "filtered_lanes": [float(x) for x in np.asarray(t.filtered_lanes)],
+        "telemetry_wire_bytes": float(t.wire_bytes),
+    }

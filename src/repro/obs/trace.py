@@ -1,0 +1,91 @@
+"""Trace spans: name the exchange phases for XProf/perfetto and host timers.
+
+Two kinds of region markers, matching the two kinds of time in a step:
+
+* :func:`span` — in-graph. ``jax.named_scope`` attaches the span name to the
+  op metadata of everything traced under it, so compiled-HLO ops (and the
+  XProf timeline rows XLA derives from them) segment by exchange phase:
+  ``obs.backward`` → ``obs.compress`` → ``obs.collective.<backend>`` →
+  ``obs.decode`` → ``obs.apply``. Metadata only — applied unconditionally
+  because it cannot change numerics (the bitwise tests run with it on).
+* :func:`host_span` / :class:`WallTimers` — host-side. Wraps non-jit regions
+  (dispatch, blocking on results, checkpoint writes) in
+  ``jax.profiler.TraceAnnotation`` so they land on the profiler timeline too,
+  and accumulates wall seconds for the JSONL run records.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import jax
+import jax.profiler
+
+#: canonical span names, in step order — tests and the README table key on
+#: these exact strings appearing in compiled HLO ``op_name`` metadata
+SPAN_BACKWARD = "obs.backward"
+SPAN_BUCKETIZE = "obs.bucketize"
+SPAN_COMPRESS = "obs.compress"
+SPAN_COLLECTIVE = "obs.collective"  # suffixed ".<backend>" per transport
+SPAN_DECODE = "obs.decode"
+SPAN_APPLY = "obs.apply"
+
+SPAN_NAMES = (
+    SPAN_BACKWARD,
+    SPAN_BUCKETIZE,
+    SPAN_COMPRESS,
+    SPAN_COLLECTIVE,
+    SPAN_DECODE,
+    SPAN_APPLY,
+)
+
+
+def span(name: str):
+    """In-graph span: a ``jax.named_scope`` carrying an ``obs.`` name.
+
+    ``name`` may be a bare phase (``"compress"``) or already qualified
+    (``"collective.ring"``); either way the scope is ``obs.``-prefixed so
+    profiler rows from this subsystem sort together.
+    """
+    if not name.startswith("obs."):
+        name = f"obs.{name}"
+    return jax.named_scope(name)
+
+
+@contextmanager
+def host_span(name: str):
+    """Host-side region on the profiler timeline (non-jit work)."""
+    if not name.startswith("obs."):
+        name = f"obs.{name}"
+    with jax.profiler.TraceAnnotation(name):
+        yield
+
+
+def step_span(step: int):
+    """Whole-step marker; XProf's step-time view groups by these."""
+    return jax.profiler.StepTraceAnnotation("train", step_num=step)
+
+
+class WallTimers:
+    """Named wall-clock accumulators for the host side of a step.
+
+    ``with timers.region("step"): ...`` both annotates the profiler timeline
+    and adds the elapsed seconds to ``timers.seconds["step"]``; ``drain()``
+    returns and resets the totals, which is what the train loop folds into
+    each JSONL record as ``wall_<name>_s``.
+    """
+
+    def __init__(self):
+        self.seconds: dict[str, float] = {}
+
+    @contextmanager
+    def region(self, name: str):
+        t0 = time.perf_counter()
+        with host_span(name):
+            yield
+        self.seconds[name] = self.seconds.get(name, 0.0) + (time.perf_counter() - t0)
+
+    def drain(self) -> dict[str, float]:
+        out, self.seconds = self.seconds, {}
+        return out

@@ -41,6 +41,7 @@ from repro.comm import bucketize, compressed
 from repro.comm.collective import _default_backend, _worker_index, world_size
 from repro.core.aggregation import AggInfo
 from repro.core.compressors import Compressor, ScaledSignCompressor
+from repro.obs import telemetry as obs_telemetry
 from repro.overlap.schedule import OverlapSchedule
 from repro.utils import compat
 
@@ -85,6 +86,7 @@ def build_overlapped_aggregator(
     ef_axes: AxisNames,
     *,
     backend=None,
+    telemetry: bool = False,
 ):
     """Schedule-driven aggregator with the same signature/contract as the
     one-shot ``build_bucketed_aggregator``: ``fn(buckets_w, err_w, srv_w,
@@ -95,6 +97,10 @@ def build_overlapped_aggregator(
     decode split across the two phases (collective issued in phase 1, decode
     deferred to phase 2); mean-only backends fuse decode into the phase-1
     exchange — both orders are bitwise-identical to the one-shot path.
+    ``telemetry`` adds the :class:`repro.obs.telemetry.Telemetry` aux output
+    on ``info.telemetry``; here ``group_bytes`` splits the wire bill per
+    *schedule* group (the unit the pipeline exposes or hides), feeding the
+    comm-exposure model directly.
     """
     if strategy not in OVERLAP_STRATEGIES:
         raise ValueError(
@@ -128,7 +134,9 @@ def build_overlapped_aggregator(
         # encode k+1 have no data dependency, which is the pipeline.
         staged = []  # [(slice, encoded/new_err/dens, collective result)]
         wire_bits = 0.0
+        grp_bits: list[float] = []  # telemetry: wire split per SCHEDULE group
         for grp in schedule.groups:
+            g_bits = 0.0
             for sl in grp.slices:
                 b = buckets[sl.group][0][sl.start : sl.stop]
                 m = masks[sl.group][sl.start : sl.stop]
@@ -138,6 +146,7 @@ def build_overlapped_aggregator(
                     tot = lax.psum(s, ef_axes)
                     staged.append((sl, None, None, jnp.where(tot >= 0, 1.0, -1.0) * m))
                     wire_bits += (w - 1) * nb * bs
+                    g_bits += (w - 1) * nb * bs
                 else:
                     e = err[sl.group][0][sl.start : sl.stop]
                     ks = keys_full[sl.group]
@@ -151,6 +160,8 @@ def build_overlapped_aggregator(
                         out = backend.decode_mean(comp, payload, bs, ef_axes, w)
                         staged.append((sl, ne, d_b, out))
                     wire_bits += (w - 1) * nb * bucket_bits
+                    g_bits += (w - 1) * nb * bucket_bits
+            grp_bits.append(g_bits)
 
         # ---- phase 2: decode gathered payloads, scatter into full stacks
         outs = [jnp.zeros((g.n_buckets, bs), jnp.float32) for g in layout.groups]
@@ -167,9 +178,23 @@ def build_overlapped_aggregator(
         # identical reduction order to the one-shot body: per dtype group
         # mean, then mean over groups, then pmean
         dens = [jnp.mean(d) if has_err else jnp.float32(1.0) for d in dens_full]
+        tele = None
+        if telemetry:
+            err_norms = [
+                obs_telemetry.residual_l2(ne) if has_err else jnp.float32(0.0)
+                for ne in new_errs
+            ]
+            tele = obs_telemetry.Telemetry(
+                err_l2=lax.pmean(jnp.stack(err_norms), ef_axes),
+                density=lax.pmean(jnp.stack(dens), ef_axes),
+                wire_bytes=jnp.float32(wire_bits / 8.0),
+                group_bytes=jnp.asarray(grp_bits, jnp.float32) / 8.0,
+                filtered_lanes=jnp.zeros((w,), jnp.float32),
+            )
         info = AggInfo(
             wire_bytes_per_device=jnp.float32(wire_bits / 8.0),
             mean_density=lax.pmean(jnp.mean(jnp.stack(dens)), ef_axes),
+            telemetry=tele,
         )
         return (
             tuple(outs),
@@ -184,7 +209,11 @@ def build_overlapped_aggregator(
         tuple(P() for _ in range(n_dtype)),
         stacked if has_err else (),
         (),
-        AggInfo(wire_bytes_per_device=P(), mean_density=P()),
+        AggInfo(
+            wire_bytes_per_device=P(),
+            mean_density=P(),
+            telemetry=obs_telemetry.replicated_specs() if telemetry else None,
+        ),
     )
     return compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, manual_axes=None

@@ -3,13 +3,19 @@
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Iterator
 
 import jax
 
+from repro.comm import bucketize as comm_bucketize
+from repro.comm import collective as comm_collective
 from repro.comm.api import CommSpec
 from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
+from repro.obs import sink as obs_sink
+from repro.obs import telemetry as obs_telemetry
+from repro.obs import trace as obs_trace
 from repro.configs.base import ByzConfig, OverlapConfig
 from repro.core import optim
 from repro.core.compressors import get_compressor
@@ -57,10 +63,17 @@ class TrainJob:
     # individual legacy fields above into a CommSpec (comm_spec()), set it
     # to override them wholesale (e.g. to pick a collective backend)
     comm: CommSpec | None = None
+    # in-graph telemetry level ("off" | "full") — repro.obs run records
+    telemetry: str = "off"
+    # directory for the schema-versioned run.jsonl (repro.obs.sink); empty
+    # disables the file sink (log_fn / history still work as before)
+    log_dir: str = ""
 
     def comm_spec(self) -> CommSpec:
         """The job's gradient-exchange spec (``comm`` or the legacy fields)."""
         if self.comm is not None:
+            if self.telemetry != "off" and self.comm.telemetry == "off":
+                return dataclasses.replace(self.comm, telemetry=self.telemetry)
             return self.comm
         return CommSpec(
             strategy=self.strategy,
@@ -68,6 +81,7 @@ class TrainJob:
             bucket_size=self.bucket_size,
             overlap=self.overlap,
             byz=self.byz,
+            telemetry=self.telemetry,
         )
 
 
@@ -117,23 +131,62 @@ def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: C
         state = jax.device_put(state, bundle.in_shardings[0])
         step_fn = bundle.jit()
 
+        writer = None
+        if job.log_dir:
+            writer = obs_sink.RunRecordWriter(os.path.join(job.log_dir, "run.jsonl"))
+            modeled = None
+            if spec.strategy != "dense" and spec.bucket_size is not None:
+                layout = comm_bucketize.build_layout(state.params, spec.bucket_size)
+                w = comm_collective.world_size(mesh, ef_axes)
+                modeled = obs_telemetry.modeled_wire_bytes(
+                    spec.strategy, layout, w, spec.resolved_compressor
+                )
+            writer.write(
+                obs_sink.run_meta(
+                    config={
+                        "strategy": spec.strategy,
+                        "backend": spec.backend,
+                        "steps": job.steps,
+                        "batch": job.batch,
+                        "seq": job.seq,
+                        "optimizer": job.optimizer,
+                        "policy": policy,
+                        "bucket_size": spec.bucket_size,
+                    },
+                    telemetry=spec.telemetry,
+                    modeled_wire_bytes=modeled,
+                )
+            )
+
         history = []
+        timers = obs_trace.WallTimers()
         t0 = time.time()
-        for i in range(job.steps):
-            batch = example if i == 0 else next(batches)
-            batch = jax.device_put(batch, bundle.in_shardings[1])
-            state, (loss, metrics) = step_fn(state, batch)
-            if i % job.log_every == 0 or i == job.steps - 1:
-                rec = {
-                    "step": i,
-                    "loss": float(loss),
-                    "wire_bytes": float(metrics["wire_bytes"]),
-                    "density": float(metrics["density"]),
-                    "wall_s": time.time() - t0,
-                }
-                history.append(rec)
-                if log_fn:
-                    log_fn(rec)
-            if job.ckpt_every and job.ckpt_dir and (i + 1) % job.ckpt_every == 0:
-                ckpt.save_checkpoint(job.ckpt_dir, jax.device_get(state), i + 1)
+        try:
+            for i in range(job.steps):
+                batch = example if i == 0 else next(batches)
+                batch = jax.device_put(batch, bundle.in_shardings[1])
+                logged = i % job.log_every == 0 or i == job.steps - 1
+                with obs_trace.step_span(i), timers.region("step"):
+                    state, (loss, metrics) = step_fn(state, batch)
+                    if logged:
+                        jax.block_until_ready(loss)
+                walls = timers.drain()
+                if logged:
+                    rec = obs_sink.step_record(i, {"loss": loss, **metrics}, walls=walls)
+                    rec["wall_s"] = time.time() - t0
+                    history.append(rec)
+                    if log_fn:
+                        log_fn(rec)
+                    if writer:
+                        writer.write(rec)
+                if job.ckpt_every and job.ckpt_dir and (i + 1) % job.ckpt_every == 0:
+                    ckpt.save_checkpoint(job.ckpt_dir, jax.device_get(state), i + 1)
+        finally:
+            # the epilogue record is unconditional — a zero-step run (or a
+            # crashed one) still closes with a parseable "final" line
+            if writer:
+                writer.write(
+                    obs_sink.final_record(history, steps=job.steps, wall_s=time.time() - t0)
+                )
+                writer.close()
         return state, history

@@ -46,6 +46,8 @@ from repro.configs.base import ByzConfig, OverlapConfig
 from repro.core import aggregation, optim
 from repro.core.compressors import Compressor
 from repro.models import layers, transformer
+from repro.obs import trace as obs_trace
+from repro.obs import telemetry as obs_telemetry
 from repro.utils import compat
 from repro.models.act_sharding import activation_sharding
 from repro.models.config import ModelConfig
@@ -471,9 +473,10 @@ def _make_bucketed_ef_step(
         )
         # per-worker grads: vmap over the leading EF-worker axis, params
         # broadcast — pure GSPMD-auto, composes with tp/fsdp/remat/scan
-        (loss_w, metrics_w), grads_w = jax.vmap(
-            lambda b: grad_fn(state.params, b)
-        )(wb)
+        with obs_trace.span(obs_trace.SPAN_BACKWARD):
+            (loss_w, metrics_w), grads_w = jax.vmap(
+                lambda b: grad_fn(state.params, b)
+            )(wb)
         grads_w = lax.with_sharding_constraint(grads_w, grad_shardings)
         if attackers:
             # fault injection on the worker lanes; the attack key is folded
@@ -485,9 +488,10 @@ def _make_bucketed_ef_step(
         updates_w, opt_state = jax.vmap(
             lambda g, o: local_chain.update(g, o, state.params)
         )(grads_w, state.opt_state)
-        buckets_w = jax.vmap(lambda u: comm_bucketize.flatten_buckets(layout, u))(
-            updates_w
-        )
+        with obs_trace.span(obs_trace.SPAN_BUCKETIZE):
+            buckets_w = jax.vmap(lambda u: comm_bucketize.flatten_buckets(layout, u))(
+                updates_w
+            )
         key, sub = jax.random.split(state.agg_state.key)
         agg_buckets, new_err, new_srv, info = agg_fn(
             buckets_w,
@@ -495,8 +499,9 @@ def _make_bucketed_ef_step(
             state.agg_state.server_error,
             sub,
         )
-        updates = comm_bucketize.unflatten_buckets(layout, agg_buckets)
-        params = optim.apply_updates(state.params, updates)
+        with obs_trace.span(obs_trace.SPAN_APPLY):
+            updates = comm_bucketize.unflatten_buckets(layout, agg_buckets)
+            params = optim.apply_updates(state.params, updates)
         new_agg = aggregation.AggState(
             worker_error=new_err,
             server_error=new_srv,
@@ -507,6 +512,8 @@ def _make_bucketed_ef_step(
         metrics = {k: jnp.mean(v) for k, v in metrics_w.items()}
         metrics["wire_bytes"] = info.wire_bytes_per_device
         metrics["density"] = info.mean_density
+        if info.telemetry is not None:
+            metrics["obs"] = info.telemetry
         new_state = TrainState(params, opt_state, new_agg, state.step + 1)
         return new_state, (loss, metrics)
 
@@ -521,8 +528,11 @@ def _make_bucketed_ef_step(
         params=param_specs, opt_state=opt_specs, agg_state=agg_specs, step=P()
     )
     metric_keys = ("loss", "moe_aux_loss", "moe_z_loss", "wire_bytes", "density")
+    metrics_sp = {k: P() for k in metric_keys}
+    if spec.telemetry != "off":
+        metrics_sp["obs"] = obs_telemetry.replicated_specs()
     in_sh = (rules.named(state_specs), rules.named(batch_specs))
-    out_sh = (rules.named(state_specs), rules.named((P(), {k: P() for k in metric_keys})))
+    out_sh = (rules.named(state_specs), rules.named((P(), metrics_sp)))
     return StepBundle(train_step, in_sh, out_sh, donate_argnums=(0,))
 
 
