@@ -13,8 +13,8 @@ import dataclasses
 from typing import Callable
 
 KNOWN_SUITES = (
-    "kernels", "aggregation", "comm", "backends", "overlap", "byz", "convergence", "serve",
-    "roofline", "obs", "smoke",
+    "kernels", "aggregation", "comm", "backends", "overlap", "byz", "fed", "convergence",
+    "serve", "roofline", "obs", "smoke",
 )
 
 

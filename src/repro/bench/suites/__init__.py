@@ -7,6 +7,7 @@ from repro.bench.suites import (  # noqa: F401
     byz,
     comm,
     convergence,
+    fed,
     kernels,
     obs,
     overlap,

@@ -1,0 +1,235 @@
+"""Federated-tier benches: wire-model exactness, convergence across
+participation rates, cohort-scale wall time, and the million-client pool.
+
+``python -m repro.bench run --suite fed`` → BENCH_fed.json. The headline is
+the ISSUE's scale acceptance: a 10^6-client residual pool driven by a
+10^4-client cohort runs as ONE compiled program per round — nothing in the
+program scales with ``n_clients`` except the pool gather/scatter — with the
+partial-participation persistence guarantee gated (rows of never-sampled
+clients stay bitwise at the zero init) and the server's wire bill gated to
+be independent of the population (only sampled clients pay).
+
+All benches run the REAL round builder (:func:`repro.fed.round.make_fed_round`)
+over the least-squares toy of the byz suite's convergence study — the model is
+small so every byte and every row of the residual pool is attributable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.artifact import Metric
+from repro.bench.measure import time_fn, wall_metric
+from repro.bench.registry import register_bench
+from repro.comm import bucketize
+from repro.core import aggregation, optim
+from repro.core.compressors import ScaledSignCompressor
+from repro.fed import FedSpec, init_fed_state, make_fed_round
+from repro.obs import telemetry as obs_telemetry
+
+DIM = 128
+BUCKET_SIZE = 64  # DIM = 2 buckets, % 32 == 0 for sign packing
+LR = 0.1
+ROUNDS = 40
+TAIL = 10
+
+# the million-client cell: one f32 pool row is nb·bs·4 = 128 B, so the full
+# pool is 128 MB — sized to fit a CI runner while the cohort stays 10^4
+MILLION = 1_000_000
+MILLION_COHORT = 10_000
+MILLION_BS = 32  # one bucket of 32 per client row
+
+
+def _toy(n_elems=DIM, bucket=BUCKET_SIZE):
+    """Per-client least-squares-style quadratic: client cid's optimum is a
+    scaled ramp, so gradients are deterministic in cid and rounds are
+    seed-stable across jax pins (no data RNG inside the round)."""
+    params = {"w": jnp.zeros((n_elems,), jnp.float32)}
+    layout = bucketize.build_layout(params, bucket)
+    ramp = jnp.linspace(0.5, 1.5, n_elems)
+
+    def grad_fn(p, b):
+        def lf(q):
+            r = q["w"] - b["target"]
+            return 0.5 * jnp.sum(r * r), {}
+
+        (loss, m), g = jax.value_and_grad(lf, has_aux=True)(p)
+        return (loss, m), g
+
+    def data_fn(idx, key, round_idx):
+        return {"target": 0.01 * idx.astype(jnp.float32)[:, None] * ramp[None, :]}
+
+    return params, layout, grad_fn, data_fn
+
+
+def _match(name, value, *, tol=0.0, config=None, abs_tol=0.0, unit="bytes"):
+    return Metric(
+        name=name, value=round(float(value), 6), metric="value", unit=unit,
+        config=config or {}, direction="match", tolerance=tol, abs_tolerance=abs_tol,
+    )
+
+
+def _gate(name, cond, *, config=None):
+    return Metric(
+        name=name, value=float(bool(cond)), metric="gate", unit="bool",
+        config=config or {}, direction="match", tolerance=0.0,
+    )
+
+
+@register_bench("fed_wire_model", suites=("fed", "smoke"))
+def bench_fed_wire_model(ctx):
+    """In-graph billed bytes == the analytic fed wire model, exactly, and the
+    bill is independent of the client population (only the cohort pays)."""
+    params, layout, grad_fn, data_fn = _toy()
+    chain = optim.sgd(LR)
+    comp = ScaledSignCompressor()
+    out = []
+    for n, cohort in ((100, 10), (100_000, 10), (1000, 100)):
+        spec = FedSpec(n_clients=n, cohort=cohort)
+        rf = jax.jit(make_fed_round(spec, layout, comp, chain, grad_fn, data_fn))
+        state = init_fed_state(params, chain, layout, spec, seed=ctx.seed)
+        _, (_, metrics) = rf(state)
+        billed = float(metrics["wire_bytes"])
+        modeled = obs_telemetry.modeled_fed_wire_bytes(layout, cohort, comp)
+        closed = sum(
+            aggregation.fed_round_wire_bytes(g.n_buckets, layout.bucket_size, cohort)
+            for g in layout.groups
+        )
+        cfgd = {"n_clients": n, "cohort": cohort}
+        out.append(_match(f"fed_wire_bytes_n{n}_c{cohort}", billed, config=cfgd))
+        out.append(_gate(
+            f"fed_wire_matches_model_n{n}_c{cohort}",
+            billed == modeled == closed, config=cfgd,
+        ))
+    # same cohort, 1000x the population: identical bill
+    out.append(_gate("fed_wire_independent_of_population",
+                     out[0].value == out[2].value))
+    return out
+
+
+@register_bench("fed_participation_convergence", suites=("fed",))
+def bench_fed_participation_convergence(ctx):
+    """Tail loss across participation ∈ {1.0, 0.1, 0.01} on a 100-client
+    population: every rate converges (EF keeps partial-participation rounds
+    unbiased in the long run), lower participation pays proportionally fewer
+    wire bytes per round."""
+    params, layout, grad_fn, data_fn = _toy()
+    chain = optim.sgd(LR)
+    comp = ScaledSignCompressor()
+    rounds = 15 if ctx.fast else ROUNDS
+    out = []
+    tails = {}
+    for part in (1.0, 0.1, 0.01):
+        spec = FedSpec(n_clients=100, participation=part)
+        rf = jax.jit(make_fed_round(spec, layout, comp, chain, grad_fn, data_fn))
+        state = init_fed_state(params, chain, layout, spec, seed=ctx.seed)
+        losses = []
+        for _ in range(rounds):
+            state, (loss, metrics) = rf(state)
+            losses.append(float(loss))
+        tail = float(np.mean(losses[-min(TAIL, rounds // 3):]))
+        head = float(np.mean(losses[: rounds // 3]))
+        tails[part] = tail
+        cfgd = {"participation": part, "cohort": spec.cohort_size, "rounds": rounds}
+        out.append(Metric(
+            name=f"fed_tail_loss_p{part}", value=round(tail, 6), metric="objective",
+            unit="loss", config=cfgd, direction="match", tolerance=0.05,
+            abs_tolerance=1e-3,
+        ))
+        out.append(_gate(f"fed_converges_p{part}", tail < head, config=cfgd))
+        out.append(_match(
+            f"fed_round_bytes_p{part}", float(metrics["wire_bytes"]), config=cfgd,
+        ))
+    out.append(_gate(
+        "fed_bytes_scale_with_participation",
+        tails[1.0] is not None
+        and obs_telemetry.modeled_fed_wire_bytes(layout, 1, comp) * 100
+        == obs_telemetry.modeled_fed_wire_bytes(layout, 100, comp),
+    ))
+    return out
+
+
+@register_bench("fed_cohort_scale_wall", suites=("fed",))
+def bench_fed_cohort_scale_wall(ctx):
+    """Steady-state round wall time as the cohort grows over a 10^4-client
+    pool — the vmap'd cohort axis is the only axis that scales."""
+    params, layout, grad_fn, data_fn = _toy()
+    chain = optim.sgd(LR)
+    comp = ScaledSignCompressor()
+    n = 2_000 if ctx.fast else 10_000
+    out = []
+    for cohort in (16, 64) if ctx.fast else (16, 64, 256):
+        spec = FedSpec(n_clients=n, cohort=cohort)
+        rf = jax.jit(make_fed_round(spec, layout, comp, chain, grad_fn, data_fn))
+        state = init_fed_state(params, chain, layout, spec, seed=ctx.seed)
+
+        def run(st):
+            new, (loss, _) = rf(st)
+            return new, loss
+
+        state, _ = run(state)  # compile outside the timed region
+        timing = time_fn(lambda: run(state)[1], iters=5 if ctx.fast else 10)
+        out.append(wall_metric(
+            f"fed_round_wall_n{n}_c{cohort}", timing,
+            config={"n_clients": n, "cohort": cohort},
+        ))
+    return out
+
+
+@register_bench("fed_million_clients", suites=("fed",))
+def bench_fed_million_clients(ctx):
+    """The scale acceptance: a 10^6-client EF residual pool, 10^4-client
+    cohorts, ONE compiled program per round. Gates: the pool holds exact
+    per-client state (touched rows != 0, never-sampled rows bitwise zero
+    after 2 rounds), and the server bill equals the cohort model — no term
+    scales with the million."""
+    n = 100_000 if ctx.fast else MILLION
+    cohort = 1_000 if ctx.fast else MILLION_COHORT
+    params = {"w": jnp.zeros((MILLION_BS,), jnp.float32)}
+    layout = bucketize.build_layout(params, MILLION_BS)
+    ramp = jnp.linspace(0.5, 1.5, MILLION_BS)
+    chain = optim.sgd(LR)
+    comp = ScaledSignCompressor()
+
+    def grad_fn(p, b):
+        def lf(q):
+            r = q["w"] - b["target"]
+            return 0.5 * jnp.sum(r * r), {}
+
+        (loss, m), g = jax.value_and_grad(lf, has_aux=True)(p)
+        return (loss, m), g
+
+    def data_fn(idx, key, round_idx):
+        return {"target": 1e-5 * idx.astype(jnp.float32)[:, None] * ramp[None, :]}
+
+    spec = FedSpec(n_clients=n, cohort=cohort)
+    rf = jax.jit(make_fed_round(spec, layout, comp, chain, grad_fn, data_fn))
+    state = init_fed_state(params, chain, layout, spec, seed=ctx.seed)
+    state, (_, m1) = rf(state)
+    timing = time_fn(lambda: rf(state)[1], iters=3, warmup=1)
+    state, (_, m2) = rf(state)
+    pool = np.asarray(state.residuals[0])
+    touched = np.abs(pool).sum(axis=(1, 2)) > 0.0
+    n_touched = int(touched.sum())
+    cfgd = {"n_clients": n, "cohort": cohort, "bucket_size": MILLION_BS}
+    pool_bytes = pool.size * 4
+    return [
+        _match("fed_million_pool_bytes", pool_bytes, config=cfgd),
+        _match("fed_million_round_bytes", float(m2["wire_bytes"]), config=cfgd),
+        _gate(
+            "fed_million_bill_is_cohort_only",
+            float(m1["wire_bytes"])
+            == obs_telemetry.modeled_fed_wire_bytes(layout, cohort, comp),
+            config=cfgd,
+        ),
+        # ≤ 2 rounds × cohort rows can be non-zero; every other row of the
+        # million-row pool is still the bitwise zero init
+        _gate("fed_million_persistence", 0 < n_touched <= 2 * cohort, config=cfgd),
+        Metric(
+            name="fed_million_touched_rows", value=float(n_touched),
+            metric="count", unit="rows", config=cfgd, direction="info",
+        ),
+        wall_metric("fed_million_round_wall", timing, config=cfgd),
+    ]

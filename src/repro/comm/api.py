@@ -22,11 +22,15 @@ validated early at config time and again, fully, at build time.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 from repro.comm import bucketize, compressed, robust
 from repro.comm.errors import PathConfigError, UnknownStrategyError, WireFormatError
 from repro.configs.base import ByzConfig, OverlapConfig
 from repro.core.compressors import Compressor, ScaledSignCompressor, get_compressor
+
+if TYPE_CHECKING:  # repro.fed imports comm.errors — keep the runtime edge one-way
+    from repro.fed.spec import FedSpec
 
 AxisNames = tuple[str, ...]
 
@@ -55,6 +59,10 @@ class CommSpec:
     byz: ByzConfig | None = None
     overlap: OverlapConfig | None = None
     telemetry: str = "off"
+    # federated rider (repro.fed): simulate a client population over the
+    # same bucket wire format — per-round cohorts, FedAvg weights, per-client
+    # EF residual pools; None = the data-parallel exchange
+    fed: "FedSpec | None" = None
 
     @property
     def resolved_compressor(self) -> Compressor | None:
@@ -120,6 +128,33 @@ class CommSpec:
                 f"with bucket_size set, got strategy={self.strategy!r}, "
                 f"bucket_size={self.bucket_size!r}"
             )
+        if self.fed is not None:
+            if self.strategy == "dense" or self.bucket_size is None:
+                raise PathConfigError(
+                    "the federated tier consumes the bucketed EF wire format (per-"
+                    "client residual pools are (n_clients, n_buckets, bucket_size) "
+                    "stacks); it needs an EF strategy with bucket_size set, got "
+                    f"strategy={self.strategy!r}, bucket_size={self.bucket_size!r}"
+                )
+            if self.strategy != "ef_allgather":
+                raise PathConfigError(
+                    "fed server aggregation is the payload-mean family: use "
+                    f"strategy='ef_allgather' with a fed rider, got {self.strategy!r} "
+                    "(ring/alltoall hop structure and the robust decodes have no "
+                    "server-side analogue yet)"
+                )
+            if self.byz is not None:
+                raise PathConfigError(
+                    "byz × fed is not supported yet: client sampling turns the "
+                    "declared tolerance into a per-round STOCHASTIC attacker count "
+                    "(see ROADMAP); drop the byz rider or the fed rider"
+                )
+            if self.overlap is not None:
+                raise PathConfigError(
+                    "overlap pipelines the data-parallel collective with backward "
+                    "compute; the fed round is a server-side simulation with no "
+                    "collective to hide — drop the overlap rider"
+                )
         if ef_axes is not None and self.strategy == "ef_ring":
             backends.ring_axis(ef_axes)  # single-axis EF world required
         if world is not None:

@@ -23,6 +23,9 @@ class names make the failure *kind* programmatic:
                              assumes sign payloads)
 ``PathConfigError``          overlap / byz knobs combined with a gradient path
                              that cannot host them (dense or per-leaf)
+``FedConfigError``           federated-tier spec rejected (a cohort that
+                             resolves to zero sampled clients, participation
+                             out of (0, 1], skew knobs out of range, ...)
 """
 
 from __future__ import annotations
@@ -53,4 +56,8 @@ class WireFormatError(CommSpecError):
 
 
 class PathConfigError(CommSpecError):
+    pass
+
+
+class FedConfigError(CommSpecError):
     pass

@@ -118,6 +118,14 @@ def bucketed_sign_alltoall_wire_bytes(n_buckets: int, bucket_size: int, world: i
     return 2.0 * (world - 1) * shard * (bucket_size / 8.0 + 4.0)
 
 
+def fed_round_wire_bytes(n_buckets: int, bucket_size: int, cohort: int) -> float:
+    """Federated-round wire model (sign family): the server receives one sign
+    payload per bucket from each SAMPLED client — ``cohort`` payloads of
+    bucket_size bits + one fp32 scale. Only sampled clients pay bytes; the
+    bill is independent of ``n_clients`` (repro.fed exchange granularity)."""
+    return cohort * n_buckets * (bucket_size / 8.0 + 4.0)
+
+
 def bucketed_sign_ring_per_step_bytes(n_buckets: int, bucket_size: int) -> float:
     """One ring hop: every device receives one full sign payload per bucket
     (bucket_size bits + one fp32 scale) from its neighbor."""

@@ -1,0 +1,26 @@
+"""repro.fed — federated EF simulation on the bucket wire format.
+
+Million-client error-feedback simulation as vmap'd cohorts over the existing
+``repro.comm`` bucket wire format: deterministic client sampling, FedAvg
+dataset-size weighting, per-client EF residual pools that persist bitwise
+across skipped rounds, non-IID shards, and an async staleness mode. Rides a
+:class:`~repro.comm.api.CommSpec` via the ``fed`` rider
+(:class:`~repro.fed.spec.FedSpec`).
+"""
+
+from repro.fed.round import FedState, init_fed_state, make_fed_round, staleness_weights
+from repro.fed.sampling import dataset_weights, sample_cohort
+from repro.fed.shards import client_sizes, make_client_data_fn
+from repro.fed.spec import FedSpec
+
+__all__ = [
+    "FedSpec",
+    "FedState",
+    "client_sizes",
+    "dataset_weights",
+    "init_fed_state",
+    "make_client_data_fn",
+    "make_fed_round",
+    "sample_cohort",
+    "staleness_weights",
+]

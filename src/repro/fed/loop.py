@@ -1,0 +1,120 @@
+"""Federated training loop: rounds instead of steps, same run records.
+
+``run_training`` dispatches here when the job's ``CommSpec`` carries a
+``fed`` rider. One round = one compiled call of
+:func:`repro.fed.round.make_fed_round`; ``job.steps`` counts ROUNDS and
+``job.batch`` is the PER-CLIENT batch (a cohort of C clients sees C·batch
+sequences per round). The JSONL sink writes the same schema-versioned
+records as the data-parallel loop — ``modeled_wire_bytes`` uses the fed wire
+model (only sampled clients pay), and telemetry="full" threads the in-graph
+:class:`~repro.obs.telemetry.Telemetry` through unchanged.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+
+from repro.comm import bucketize as comm_bucketize
+from repro.comm.api import CommSpec
+from repro.core.compressors import ScaledSignCompressor
+from repro.fed import round as fed_round
+from repro.fed import shards
+from repro.models import transformer
+from repro.models.act_sharding import activation_sharding
+from repro.obs import sink as obs_sink
+from repro.obs import telemetry as obs_telemetry
+from repro.obs import trace as obs_trace
+
+
+def run_fed_training(job, spec: CommSpec | None = None, log_fn: Callable | None = None):
+    """Run ``job.steps`` federated rounds; returns ``(FedState, history)``."""
+    from repro.train import loop as train_loop  # runtime import; no cycle
+
+    spec = spec or job.comm_spec()
+    fed = spec.fed
+    assert fed is not None, "run_fed_training needs a CommSpec with a fed rider"
+    spec.validate()
+    cfg = job.cfg
+    chain = train_loop._local_chain(job)
+    comp = spec.resolved_compressor or ScaledSignCompressor()
+    key = jax.random.PRNGKey(job.seed)
+
+    params = transformer.init_params(cfg, key)
+    layout = comm_bucketize.build_layout(params, spec.bucket_size)
+    sizes = shards.client_sizes(
+        fed.n_clients, fed.size_skew, seed=job.seed, base=fed.base_examples
+    )
+    data_fn = shards.make_client_data_fn(
+        fed, batch=job.batch, seq=job.seq, vocab=cfg.vocab_size
+    )
+
+    def grad_fn(p, b):
+        def lf(pp):
+            with activation_sharding(None, None):
+                return transformer.loss_fn(pp, cfg, b)
+
+        return jax.value_and_grad(lf, has_aux=True)(p)
+
+    round_fn = fed_round.make_fed_round(
+        fed, layout, comp, chain, grad_fn, data_fn,
+        sizes=sizes, telemetry=spec.telemetry == "full",
+    )
+    state = fed_round.init_fed_state(params, chain, layout, fed, seed=job.seed)
+    fn = jax.jit(round_fn, donate_argnums=(0,))
+
+    writer = None
+    if job.log_dir:
+        writer = obs_sink.RunRecordWriter(os.path.join(job.log_dir, "run.jsonl"))
+        writer.write(
+            obs_sink.run_meta(
+                config={
+                    "strategy": spec.strategy,
+                    "backend": spec.backend,
+                    "steps": job.steps,
+                    "batch": job.batch,
+                    "seq": job.seq,
+                    "optimizer": job.optimizer,
+                    "bucket_size": spec.bucket_size,
+                    "fed_clients": fed.n_clients,
+                    "fed_cohort": fed.cohort_size,
+                    "fed_label_skew": fed.label_skew,
+                    "fed_size_skew": fed.size_skew,
+                    "fed_staleness": fed.staleness,
+                },
+                telemetry=spec.telemetry,
+                modeled_wire_bytes=obs_telemetry.modeled_fed_wire_bytes(
+                    layout, fed.cohort_size, comp
+                ),
+            )
+        )
+
+    history = []
+    timers = obs_trace.WallTimers()
+    t0 = time.time()
+    try:
+        for i in range(job.steps):
+            logged = i % job.log_every == 0 or i == job.steps - 1
+            with obs_trace.step_span(i), timers.region("step"):
+                state, (loss, metrics) = fn(state)
+                if logged:
+                    jax.block_until_ready(loss)
+            walls = timers.drain()
+            if logged:
+                rec = obs_sink.step_record(i, {"loss": loss, **metrics}, walls=walls)
+                rec["wall_s"] = time.time() - t0
+                history.append(rec)
+                if log_fn:
+                    log_fn(rec)
+                if writer:
+                    writer.write(rec)
+    finally:
+        if writer:
+            writer.write(
+                obs_sink.final_record(history, steps=job.steps, wall_s=time.time() - t0)
+            )
+            writer.close()
+    return state, history

@@ -1,0 +1,234 @@
+"""The federated round: one compiled program per cohort.
+
+A round is sample → shard batches → per-client grads + local chain →
+bucketize → EF-encode against each client's OWN residual row → weighted
+server combine → (optional staleness mix) → apply — all inside one ``jit``,
+with the cohort as a leading ``vmap`` axis. 10^4+ simulated clients is one
+compile; nothing in the program scales with ``n_clients`` except the
+residual-pool gather/scatter and the O(n) sampling permutation.
+
+Program-identity short-circuits (the bitwise pins depend on these, the same
+way ``byz_f=0`` short-circuits to the literal mean decode):
+
+* full participation: no sampling op, no gather/scatter — the pool IS the
+  stacked residual, exactly the data-parallel step's ``worker_error``;
+* statically-uniform weights: the combine is the literal
+  ``decode_mean_buckets``;
+* ``staleness=0``: no history buffer in the state, no mixing ops.
+
+RNG mirrors the data-parallel step: ``key, sub = jax.random.split(state.key)``
+once per round; sampling/data/compressor streams are tagged ``fold_in``\\ s of
+``sub`` (dead code for deterministic compressors and fixed-batch drivers).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import bucketize, compressed
+from repro.core import optim
+from repro.core.compressors import Compressor, ScaledSignCompressor
+from repro.fed import sampling, server
+from repro.fed.spec import FedSpec
+from repro.obs import telemetry as obs_telemetry
+
+
+class FedState(NamedTuple):
+    """Carried state of the federated simulation.
+
+    ``residuals`` is the per-client EF memory: one ``(n_clients, n_buckets,
+    bucket_size)`` f32 pool per dtype group — rows of non-participating
+    clients are carried bitwise across rounds (the paper's guarantee under
+    partial participation). Clients are otherwise STATELESS (FedAvg style):
+    ``opt_state`` is the one shared local-chain state every sampled client
+    applies, advanced once per round. ``stale`` is the async-mode ring of the
+    previous D rounds' aggregates (newest first), ``()`` when staleness=0.
+    """
+
+    params: Any
+    opt_state: Any
+    residuals: tuple[jax.Array, ...]
+    stale: tuple[jax.Array, ...]
+    key: jax.Array
+    round: jax.Array
+
+
+def init_fed_state(
+    params: Any,
+    chain: optim.Transform,
+    layout: bucketize.BucketLayout,
+    spec: FedSpec,
+    *,
+    seed: int = 0,
+) -> FedState:
+    """Zero residual pools / staleness ring, fresh chain state and run key.
+
+    Pool memory is ``4 · n_clients · padded_elements`` bytes — million-client
+    simulations want a small model or a coarse layout (the fed bench runs
+    10^6 clients over a one-bucket toy problem).
+    """
+    pool = tuple(
+        jnp.zeros((spec.n_clients, g.n_buckets, layout.bucket_size), jnp.float32)
+        for g in layout.groups
+    )
+    stale = tuple(
+        jnp.zeros((spec.staleness, g.n_buckets, layout.bucket_size), jnp.float32)
+        for g in layout.groups
+    ) if spec.staleness else ()
+    return FedState(
+        params=params,
+        opt_state=chain.init(params),
+        residuals=pool,
+        stale=stale,
+        key=jax.random.PRNGKey(seed),
+        round=jnp.int32(0),
+    )
+
+
+def staleness_weights(d: int) -> np.ndarray:
+    """Polynomial staleness discount over ages 0..d: ``α_a ∝ 1/(1+a)``,
+    normalized — the FedAsync-style mixing the async-round mode applies."""
+    a = 1.0 / (1.0 + np.arange(d + 1, dtype=np.float64))
+    return a / a.sum()
+
+
+def make_fed_round(
+    spec: FedSpec,
+    layout: bucketize.BucketLayout,
+    comp: Compressor | None,
+    chain: optim.Transform,
+    grad_fn: Callable,
+    data_fn: Callable,
+    *,
+    sizes: np.ndarray | None = None,
+    telemetry: bool = False,
+) -> Callable[[FedState], tuple[FedState, tuple[jax.Array, dict]]]:
+    """Build ``round_fn(state) -> (new_state, (loss, metrics))``.
+
+    ``grad_fn(params, batch) -> ((loss, metrics), grads)`` is the train-step
+    convention; ``data_fn(idx, key, round) -> batches`` returns the cohort's
+    stacked batches (leading axis = cohort — at full participation ``idx`` is
+    statically ``arange`` and a driver may ignore it). ``sizes`` is the
+    static (n_clients,) dataset-size vector feeding the FedAvg weights;
+    ``None`` (or all-equal sizes, or ``weighting="uniform"``) selects the
+    uniform-mean fast path. Metrics carry ``wire_bytes`` (what the server
+    receives — only the sampled cohort pays) and ``density``, plus a
+    ``Telemetry`` under ``"obs"`` when ``telemetry=True`` (pure reads; the
+    off-mode program is bitwise-unchanged).
+    """
+    comp = comp or ScaledSignCompressor()
+    n, c = spec.n_clients, spec.cohort_size
+    full = spec.full_participation
+    bs = layout.bucket_size
+    masks = tuple(bucketize.valid_mask(layout, gi) for gi in range(len(layout.groups)))
+    bucket_bits = comp.wire_bits(bs)
+    if sizes is None:
+        sizes = np.full(n, spec.base_examples, dtype=np.int64)
+    sizes = np.asarray(sizes)
+    if sizes.shape != (n,):
+        raise ValueError(f"sizes must have shape ({n},), got {sizes.shape}")
+    if (sizes < 1).any():
+        raise ValueError("every client dataset size must be >= 1")
+    uniform = spec.weighting == "uniform" or bool(np.all(sizes == sizes[0]))
+    sizes_dev = None if uniform else jnp.asarray(sizes, jnp.float32)
+    d_stale = spec.staleness
+    alphas = staleness_weights(d_stale) if d_stale else None
+    # only sampled clients pay bytes: the server receives c payloads per
+    # bucket per round, regardless of n_clients
+    grp_bits = [c * g.n_buckets * bucket_bits for g in layout.groups]
+    wire_bits = float(sum(grp_bits))
+
+    def round_fn(state: FedState):
+        params = state.params
+        key, sub = jax.random.split(state.key)
+        if full:
+            idx = jnp.arange(n, dtype=jnp.int32)
+        else:
+            idx = sampling.sample_cohort(
+                jax.random.fold_in(sub, sampling.SAMPLE_TAG), n, c
+            )
+        batches = data_fn(idx, jax.random.fold_in(sub, sampling.DATA_TAG), state.round)
+        (loss_c, metrics_c), grads_c = jax.vmap(lambda b: grad_fn(params, b))(batches)
+        updates_c, opt_c = jax.vmap(
+            lambda g: chain.update(g, state.opt_state, params)
+        )(grads_c)
+        new_opt = jax.tree.map(lambda x: x[0], opt_c)
+        buckets_c = jax.vmap(lambda u: bucketize.flatten_buckets(layout, u))(updates_c)
+        res_c = state.residuals if full else server.gather_rows(state.residuals, idx)
+        weights = None
+        if not uniform:
+            weights = sampling.dataset_weights(sizes_dev[idx])
+
+        outs, new_res, dens, err_norms = [], [], [], []
+        for gi in range(len(layout.groups)):
+            if comp.deterministic:
+                payload_c, ne_c, d_c = jax.vmap(
+                    lambda bk, e, gi=gi: compressed.ef_encode_buckets(
+                        comp, bk, e, mask=masks[gi]
+                    )
+                )(buckets_c[gi], res_c[gi])
+            else:
+                gkeys = jax.vmap(
+                    lambda cid, gi=gi: jax.random.fold_in(jax.random.fold_in(sub, cid), gi)
+                )(idx)
+                payload_c, ne_c, d_c = jax.vmap(
+                    lambda bk, e, k, gi=gi: compressed.ef_encode_buckets(
+                        comp, bk, e, mask=masks[gi], key=k
+                    )
+                )(buckets_c[gi], res_c[gi], gkeys)
+            outs.append(server.weighted_combine(comp, payload_c, bs, weights))
+            new_res.append(ne_c)
+            dens.append(jnp.mean(d_c))
+            if telemetry:
+                err_norms.append(jnp.mean(jax.vmap(obs_telemetry.residual_l2)(ne_c)))
+
+        if d_stale:
+            mixed, new_stale = [], []
+            for gi, fresh in enumerate(outs):
+                hist = state.stale[gi]  # (D, nb, bs), newest first
+                mix = jnp.float32(alphas[0]) * fresh + jnp.tensordot(
+                    jnp.asarray(alphas[1:], jnp.float32), hist, axes=1
+                )
+                mixed.append(mix)
+                new_stale.append(jnp.concatenate([fresh[None], hist[:-1]], axis=0))
+            applied, stale = mixed, tuple(new_stale)
+        else:
+            applied, stale = outs, ()
+
+        updates = bucketize.unflatten_buckets(layout, tuple(applied))
+        params = optim.apply_updates(params, updates)
+        pool = (
+            tuple(new_res)
+            if full
+            else server.scatter_rows(state.residuals, idx, tuple(new_res))
+        )
+
+        loss = jnp.mean(loss_c)
+        metrics = {k: jnp.mean(v) for k, v in metrics_c.items()}
+        metrics["wire_bytes"] = jnp.float32(wire_bits / 8.0)
+        metrics["density"] = jnp.mean(jnp.stack(dens))
+        if telemetry:
+            metrics["obs"] = obs_telemetry.Telemetry(
+                err_l2=jnp.stack(err_norms),
+                density=jnp.stack(dens),
+                wire_bytes=jnp.float32(wire_bits / 8.0),
+                group_bytes=jnp.asarray(grp_bits, jnp.float32) / 8.0,
+                # no robust filtering on the fed server (byz × sampling is a
+                # ROADMAP item); the lane slot stays all-zero per its schema
+                filtered_lanes=jnp.zeros((c,), jnp.float32),
+            )
+        new_state = FedState(
+            params=params,
+            opt_state=new_opt,
+            residuals=pool,
+            stale=stale,
+            key=key,
+            round=state.round + 1,
+        )
+        return new_state, (loss, metrics)
+
+    return round_fn

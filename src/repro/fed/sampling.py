@@ -1,0 +1,42 @@
+"""Deterministic client sampling and FedAvg dataset-size weights.
+
+The cohort for round *t* is a pure function of the carried run key: the
+round function splits its key exactly like the data-parallel train step
+(``key, sub = jax.random.split(state.key)``) and folds a sampling tag into
+``sub`` — so resuming a run from round *t* replays the same cohorts, and the
+full-participation short-circuit (no sampling op at all) keeps the compiled
+program identical to the data-parallel step (the bitwise pin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: fold_in tags carving independent streams out of the per-round subkey
+#: (mirrors the byz injector's 0x5A1 idiom — the honest stream is untouched)
+SAMPLE_TAG = 0xFED5
+DATA_TAG = 0xFEDD
+
+
+def sample_cohort(key: jax.Array, n_clients: int, cohort: int) -> jax.Array:
+    """Sample ``cohort`` distinct client ids out of ``n_clients``.
+
+    Without replacement, ascending order — sorted ids make the residual-pool
+    gather/scatter order deterministic and the cohort easy to eyeball in run
+    records. (jax draws via an O(n) permutation; at n=10^6 that is a 4 MB
+    scratch array, fine for the simulation tier.)
+    """
+    idx = jax.random.choice(key, n_clients, shape=(cohort,), replace=False)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def dataset_weights(sizes: jax.Array) -> jax.Array:
+    """FedAvg weights of one cohort: sizes normalized to sum to 1 (f32).
+
+    Permutation-equivariant by construction — permuting the cohort permutes
+    the weights identically (the property tests pin this along with the
+    sum-to-1 invariant).
+    """
+    s = sizes.astype(jnp.float32)
+    return s / jnp.sum(s)

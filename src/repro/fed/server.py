@@ -1,0 +1,74 @@
+"""Server-side combine and residual-pool bookkeeping.
+
+The server consumes the UNCHANGED bucket wire format: a cohort of C clients
+ships exactly what a W-worker data-parallel step ships (one
+:class:`~repro.comm.compressed.BucketPayload` per dtype group, leading axis =
+sender). What changes is only the combine weighting:
+
+* statically-uniform weights short-circuit to the literal
+  :func:`repro.comm.compressed.decode_mean_buckets` — the same ops as the
+  ``ef_allgather`` decode, which is what makes participation=1.0 rounds
+  bitwise-equal to the data-parallel step (the byz_f=0 idiom);
+* sign-family weighted means rescale the per-bucket scales by ``C·w_i``
+  before the fused mean kernel (``Σᵢ wᵢ·scaleᵢ·signᵢ ==
+  mean_i((C·wᵢ·scaleᵢ)·signᵢ)``) — no extra decode pass;
+* generic compressors accumulate ``wᵢ · C⁻¹(payloadᵢ)`` with the same
+  two-buffer fori loop as the unweighted decode.
+
+Residual rows of non-sampled clients are carried UNTOUCHED — the scatter
+writes only the cohort's rows, which is the paper's guarantee under partial
+participation (pinned bitwise in tests/test_fed.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import compressed
+from repro.core.compressors import Compressor
+from repro.kernels import ops
+
+
+def weighted_combine(
+    comp: Compressor,
+    payload_c: compressed.BucketPayload,
+    bucket_size: int,
+    weights: jax.Array | None,
+) -> jax.Array:
+    """Combine a cohort payload stack into one (n_buckets, bucket_size) f32.
+
+    ``weights=None`` means statically-uniform: take the unweighted-mean fast
+    path (bitwise the data-parallel decode). Otherwise ``weights`` is the
+    (C,) normalized FedAvg vector and the result is ``Σᵢ wᵢ·C⁻¹(payloadᵢ)``.
+    """
+    if weights is None:
+        return compressed.decode_mean_buckets(comp, payload_c, bucket_size)
+    c = weights.shape[0]
+    if compressed._is_sign(comp):
+        scaled = payload_c.data["scale"] * (weights * c)[:, None]
+        return ops.bucket_decompress_mean(payload_c.data["words"], scaled)
+
+    def body(i, acc):
+        pay = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, False), payload_c.data
+        )
+        dec = compressed.decode_buckets(comp, compressed.BucketPayload(data=pay), bucket_size)
+        return acc + weights[i] * dec
+
+    nb = jax.tree.leaves(payload_c.data)[0].shape[1]
+    return jax.lax.fori_loop(0, c, body, jnp.zeros((nb, bucket_size), jnp.float32))
+
+
+def gather_rows(pool: tuple[jax.Array, ...], idx: jax.Array) -> tuple[jax.Array, ...]:
+    """Cohort rows of each group's (n_clients, nb, bs) residual pool."""
+    return tuple(p[idx] for p in pool)
+
+
+def scatter_rows(
+    pool: tuple[jax.Array, ...], idx: jax.Array, new: tuple[jax.Array, ...]
+) -> tuple[jax.Array, ...]:
+    """Write the cohort's fresh residuals back; every other row is carried
+    bitwise (``.at[idx].set`` touches exactly the sampled rows — ids are
+    distinct by construction, so the scatter is order-independent)."""
+    return tuple(p.at[idx].set(n) for p, n in zip(pool, new))

@@ -1,0 +1,81 @@
+"""Non-IID client shards over the synthetic token stream.
+
+Two skew knobs, both deterministic in (spec, seed):
+
+label skew
+    every client draws tokens from a contiguous vocab *window*; at
+    ``label_skew=0`` the window is the whole vocab (IID), at 1 it narrows to
+    the minimum width and windows of distant clients are disjoint — the
+    classic label-skew pathology where a sampled cohort's gradients disagree.
+
+scale skew
+    per-client dataset sizes follow a power law ``(rank+1)^-size_skew``
+    (shuffled so client id doesn't encode rank), rescaled to mean
+    ``base_examples`` — these sizes are STATIC host-side numpy, because they
+    feed the FedAvg weights and the uniform-weights short-circuit must be
+    decidable at trace time (the bitwise pin depends on it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.fed.spec import FedSpec
+
+#: narrowest label window (tokens) a fully-skewed client keeps — the Markov
+#: generator needs at least a binary alphabet to have any structure to learn
+MIN_WINDOW = 2
+
+
+def client_sizes(
+    n_clients: int, size_skew: float, *, seed: int = 0, base: int = 32
+) -> np.ndarray:
+    """Static per-client dataset sizes, mean ≈ ``base``, every size >= 1."""
+    if size_skew == 0.0:
+        return np.full(n_clients, base, dtype=np.int64)
+    raw = np.arange(1, n_clients + 1, dtype=np.float64) ** (-size_skew)
+    raw *= base * n_clients / raw.sum()
+    sizes = np.maximum(1, np.rint(raw)).astype(np.int64)
+    return np.random.default_rng(seed).permutation(sizes)
+
+
+def window_width(vocab: int, label_skew: float) -> int:
+    """Static label-window width shared by every client."""
+    return max(MIN_WINDOW, int(round(vocab * (1.0 - label_skew))))
+
+
+def window_lo(cid: jax.Array, n_clients: int, vocab: int, width: int) -> jax.Array:
+    """Traced window start for client ``cid``: clients spread evenly over
+    ``[0, vocab - width]`` so skewed windows tile the vocab."""
+    span = vocab - width
+    denom = max(1, n_clients - 1)
+    return (cid.astype(jnp.int32) * span) // denom
+
+
+def make_client_data_fn(spec: FedSpec, *, batch: int, seq: int, vocab: int):
+    """Build the round function's data hook: ``data_fn(idx, key, round) ->
+    batches`` with a leading cohort axis.
+
+    Each client's tokens come from :func:`repro.data.synthetic.token_batch`
+    over its own window (same Markov structure, shifted alphabet) with a key
+    folded from (round key, client id) — a client sees the same shard
+    regardless of which rounds sample it.
+    """
+    width = window_width(vocab, spec.label_skew)
+    n = spec.n_clients
+
+    def data_fn(idx: jax.Array, key: jax.Array, round_idx: jax.Array):
+        kr = jax.random.fold_in(key, round_idx)
+
+        def one(cid):
+            kc = jax.random.fold_in(kr, cid)
+            b = synthetic.token_batch(kc, batch, seq, width)
+            lo = window_lo(cid, n, vocab, width)
+            return {"tokens": b["tokens"] + lo, "labels": b["labels"] + lo}
+
+        return jax.vmap(one)(idx)
+
+    return data_fn

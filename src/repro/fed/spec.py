@@ -1,0 +1,138 @@
+"""`FedSpec` — the declarative description of one federated simulation.
+
+The federated tier rides the bucketed EF wire format as a `CommSpec` rider
+(``CommSpec.fed``): strategy/compressor/bucket_size keep their meaning (what
+each sampled client ships), and this spec adds the population knobs — how
+many simulated clients exist, how many are sampled per round, how their
+shards are skewed, and how stale cohorts fold in.
+
+Every invalid combination raises :class:`repro.comm.errors.FedConfigError`
+(a ``CommSpecError``, hence a ``ValueError``) at CONSTRUCTION time — in
+particular a cohort that resolves to zero sampled clients, which would
+otherwise NaN the weighted mean at runtime (0-row reductions). Both the
+factory and the launcher flag path hit the same check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.comm.errors import FedConfigError
+
+#: accepted ``FedSpec.weighting`` values — FedAvg dataset-size weights or a
+#: plain cohort mean (the latter is also what statically-equal sizes reduce to)
+WEIGHTINGS = ("dataset_size", "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSpec:
+    """Population + sampling knobs of the federated tier.
+
+    ``cohort`` (an absolute per-round client count) and ``participation`` (a
+    sampled fraction of ``n_clients``) are two spellings of the same knob —
+    setting both is rejected; setting neither means full participation.
+    ``label_skew`` ∈ [0, 1] narrows each client's vocab window (non-IID label
+    distribution over the synthetic token stream); ``size_skew`` ≥ 0 is the
+    power-law exponent of the per-client dataset sizes (scale skew — it feeds
+    the FedAvg weights). ``staleness`` D > 0 turns on the async-round mode:
+    the applied update mixes the fresh cohort aggregate with the previous D
+    rounds' aggregates, weighted ∝ 1/(1+d) (polynomial staleness discount).
+    ``base_examples`` is the mean client dataset size the shard constructor
+    scales to.
+    """
+
+    n_clients: int = 100
+    cohort: int | None = None
+    participation: float | None = None
+    weighting: str = "dataset_size"
+    label_skew: float = 0.0
+    size_skew: float = 0.0
+    staleness: int = 0
+    base_examples: int = 32
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise FedConfigError(f"fed n_clients must be >= 1, got {self.n_clients}")
+        if self.cohort is not None and self.participation is not None:
+            raise FedConfigError(
+                "set either fed cohort (absolute) or participation (fraction), not both; "
+                f"got cohort={self.cohort}, participation={self.participation}"
+            )
+        if self.participation is not None and not 0.0 < self.participation <= 1.0:
+            raise FedConfigError(
+                f"fed participation must be in (0, 1], got {self.participation}"
+            )
+        if self.cohort is not None and self.cohort > self.n_clients:
+            raise FedConfigError(
+                f"fed cohort {self.cohort} exceeds n_clients {self.n_clients}"
+            )
+        # the zero-sampled-cohort edge: reject at spec validation, not as a
+        # NaN'd weighted mean at runtime (cohort=0 directly, or a fraction
+        # that floors to 0 clients)
+        if self.cohort_size < 1:
+            how = (
+                f"cohort={self.cohort}"
+                if self.cohort is not None
+                else f"participation={self.participation} of n_clients={self.n_clients} "
+                f"rounds to {self.cohort_size}"
+            )
+            raise FedConfigError(
+                f"fed round would sample 0 clients ({how}); a round needs at "
+                "least one participant"
+            )
+        if self.weighting not in WEIGHTINGS:
+            raise FedConfigError(
+                f"unknown fed weighting {self.weighting!r}; options: {WEIGHTINGS}"
+            )
+        if not 0.0 <= self.label_skew <= 1.0:
+            raise FedConfigError(f"fed label_skew must be in [0, 1], got {self.label_skew}")
+        if self.size_skew < 0.0:
+            raise FedConfigError(f"fed size_skew must be >= 0, got {self.size_skew}")
+        if self.staleness < 0:
+            raise FedConfigError(f"fed staleness must be >= 0, got {self.staleness}")
+        if self.base_examples < 1:
+            raise FedConfigError(f"fed base_examples must be >= 1, got {self.base_examples}")
+
+    @property
+    def cohort_size(self) -> int:
+        """Resolved clients sampled per round (cohort wins; else
+        ``floor(participation · n_clients)``; else full participation)."""
+        if self.cohort is not None:
+            return self.cohort
+        if self.participation is not None:
+            return int(self.participation * self.n_clients)
+        return self.n_clients
+
+    @property
+    def full_participation(self) -> bool:
+        return self.cohort_size == self.n_clients
+
+    @staticmethod
+    def from_args(
+        clients: int | None,
+        cohort: int | None,
+        participation: float | None,
+        shard_skew: float | None,
+        size_skew: float | None = None,
+        staleness: int | None = None,
+    ) -> "FedSpec | None":
+        """CLI plumbing: any ``--clients`` / ``--cohort`` / ``--participation``
+        / ``--shard-skew`` / ``--size-skew`` / ``--fed-staleness`` flag
+        switches the federated tier on; unset knobs keep defaults."""
+        knobs = (clients, cohort, participation, shard_skew, size_skew, staleness)
+        if all(k is None for k in knobs):
+            return None
+        kw = {}
+        if clients is not None:
+            kw["n_clients"] = clients
+        if cohort is not None:
+            kw["cohort"] = cohort
+        if participation is not None:
+            kw["participation"] = participation
+        if shard_skew is not None:
+            kw["label_skew"] = shard_skew
+        if size_skew is not None:
+            kw["size_skew"] = size_skew
+        if staleness is not None:
+            kw["staleness"] = staleness
+        return FedSpec(**kw)

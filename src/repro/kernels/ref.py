@@ -14,6 +14,11 @@ import jax.numpy as jnp
 LANE = 1024
 WORDS_PER_ROW = LANE // 32
 
+# sender counts up to this stay a Python unroll (bitwise-pinned against the
+# Pallas kernel's unrolled accumulation); beyond it the mean decode rolls
+# into a fori_loop so cohort-scale (10^4-sender) graphs stay O(1) ops
+_UNROLL_MAX = 64
+
 
 def l1_partial_ref(g: jax.Array, e: jax.Array, gamma: jax.Array) -> jax.Array:
     """Per-row L1 of the corrected step p = γ·g + e.  (rows, LANE) → (rows,)."""
@@ -119,13 +124,23 @@ def bucket_decompress_mean_ref(words: jax.Array, scales: jax.Array) -> jax.Array
     """Decompress-and-average W bucket payload stacks.
 
     words: (W, nb, bs/32) u32; scales: (W, nb) f32 → (nb, bs) f32. Sequential
-    accumulation (same order as the Pallas kernel's unrolled loop).
+    accumulation (same order as the Pallas kernel's unrolled loop). Past
+    ``_UNROLL_MAX`` senders (federated cohorts, not worker rings) the Python
+    unroll would put W copies of the decode in the graph and compile time
+    goes superlinear, so the loop rolls into a ``fori_loop`` — the identical
+    acc-then-add sequence, just not flattened at trace time.
     """
     w = words.shape[0]
     acc = jnp.zeros((words.shape[1], words.shape[2] * 32), jnp.float32)
-    for i in range(w):
-        acc = acc + bucket_sign_decode_ref(words[i], scales[i])
-    return acc / w
+    if w <= _UNROLL_MAX:
+        for i in range(w):
+            acc = acc + bucket_sign_decode_ref(words[i], scales[i])
+        return acc / w
+
+    def body(i, a):
+        return a + bucket_sign_decode_ref(words[i], scales[i])
+
+    return jax.lax.fori_loop(0, w, body, acc) / w
 
 
 def dma_ring_slots_ref(

@@ -24,6 +24,7 @@ from repro.comm.backends import BACKEND_CHOICES
 from repro.comm.bucketize import DEFAULT_BUCKET_SIZE
 from repro.configs import get_config, reduced as make_reduced
 from repro.configs.base import BYZ_ATTACKS, ByzConfig, OverlapConfig
+from repro.fed.spec import FedSpec
 from repro.launch.mesh import make_host_mesh
 from repro.obs import sink as obs_sink
 from repro.obs.telemetry import TELEMETRY_CHOICES
@@ -88,6 +89,38 @@ def main():
         help="attack magnitude for scaled_noise / const_drift (default 10.0)",
     )
     ap.add_argument(
+        "--clients", type=int, default=None,
+        help="federated tier (repro.fed): simulate this many clients; any "
+        "--clients/--cohort/--participation/--shard-skew flag enables fed "
+        "rounds (needs --strategy ef_allgather; steps count rounds, --batch "
+        "is per-client)",
+    )
+    ap.add_argument(
+        "--cohort", type=int, default=None,
+        help="clients sampled per federated round (absolute; exclusive with "
+        "--participation; a cohort of 0 is rejected at spec validation)",
+    )
+    ap.add_argument(
+        "--participation", type=float, default=None,
+        help="fraction of clients sampled per round, in (0, 1]; a fraction "
+        "that rounds to 0 clients is rejected at spec validation",
+    )
+    ap.add_argument(
+        "--shard-skew", type=float, default=None,
+        help="non-IID label skew in [0, 1]: narrows each client's vocab "
+        "window (0 = IID, 1 = disjoint minimal windows)",
+    )
+    ap.add_argument(
+        "--size-skew", type=float, default=None,
+        help="power-law exponent of per-client dataset sizes (feeds the "
+        "FedAvg weights; 0 = uniform sizes)",
+    )
+    ap.add_argument(
+        "--fed-staleness", type=int, default=None,
+        help="async-round mode: mix the applied update from the last D+1 "
+        "round aggregates with 1/(1+age) staleness weights (0 = synchronous)",
+    )
+    ap.add_argument(
         "--telemetry", default="off", choices=list(TELEMETRY_CHOICES),
         help="in-graph telemetry level (repro.obs): 'full' records per-group "
         "EF-residual norms, densities and exact wire bytes each logged step; "
@@ -116,6 +149,10 @@ def main():
         overlap=OverlapConfig.from_args(args.overlap, args.overlap_groups),
         byz=ByzConfig.from_args(args.byz_attack, args.byz_fraction, args.byz_f, args.byz_scale),
         telemetry=args.telemetry,
+        fed=FedSpec.from_args(
+            args.clients, args.cohort, args.participation,
+            args.shard_skew, args.size_skew, args.fed_staleness,
+        ),
     ).validate()  # reject bad flag combinations before any compile
     job = TrainJob(
         cfg=cfg, mesh=mesh, steps=args.steps, batch=args.batch, seq=args.seq,

@@ -151,6 +151,17 @@ def modeled_wire_bytes(
     return bits / 8.0
 
 
+def modeled_fed_wire_bytes(layout, cohort: int, comp: Compressor | None = None) -> float:
+    """Bytes the federated server receives per round: ``cohort`` bucket
+    payloads per group — only sampled clients pay, independent of the client
+    population. Mirrors the in-graph accounting of ``repro.fed.round`` term
+    for term (for the sign family this reduces to
+    ``core.aggregation.fed_round_wire_bytes`` summed over dtype groups)."""
+    comp = comp or ScaledSignCompressor()
+    bits = sum(cohort * g.n_buckets * comp.wire_bits(layout.bucket_size) for g in layout.groups)
+    return bits / 8.0
+
+
 def strategy_wire_models(
     layout, world: int, comp: Compressor | None = None
 ) -> dict[str, float]:

@@ -59,6 +59,10 @@ class TrainJob:
     # Byzantine knobs: fault-injected worker lanes + declared robust
     # tolerance (repro.comm.adversary / repro.comm.robust); None = honest
     byz: ByzConfig | None = None
+    # federated rider (repro.fed): run rounds over a simulated client
+    # population instead of data-parallel steps; steps count ROUNDS and
+    # batch is the PER-CLIENT batch (see repro.fed.loop)
+    fed: Any = None  # FedSpec | None
     # the one spec describing the whole gradient exchange; None folds the
     # individual legacy fields above into a CommSpec (comm_spec()), set it
     # to override them wholesale (e.g. to pick a collective backend)
@@ -82,6 +86,7 @@ class TrainJob:
             overlap=self.overlap,
             byz=self.byz,
             telemetry=self.telemetry,
+            fed=self.fed,
         )
 
 
@@ -108,6 +113,10 @@ def _local_chain(job: TrainJob) -> optim.Transform:
 def run_training(job: TrainJob, batches: Iterator[dict] | None = None, log_fn: Callable | None = None):
     cfg, mesh = job.cfg, job.mesh
     spec = job.comm_spec()
+    if spec.fed is not None:
+        from repro.fed import loop as fed_loop  # lazy: keeps fed out of DP runs
+
+        return fed_loop.run_fed_training(job, spec, log_fn=log_fn)
     policy = job.policy or default_policy(cfg)
     rules = ShardingRules(cfg, mesh, policy)
     ef_axes = ef_axis_names(mesh, policy) if spec.strategy != "dense" else ()

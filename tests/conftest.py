@@ -12,6 +12,12 @@ def pytest_configure(config):
     )
     config.addinivalue_line(
         "markers",
+        "fed: federated scenario tier (client sampling, residual-pool "
+        "persistence, weighted server combine) — selected as its own CI step "
+        "so fed regressions are visible",
+    )
+    config.addinivalue_line(
+        "markers",
         "tpu: needs a real TPU backend (Pallas compile, not interpret mode); "
         "auto-skipped on CPU/GPU so CI on GitHub-hosted runners stays green",
     )

@@ -124,7 +124,10 @@ def test_wire_bytes_ratio_signsgd_vs_dense():
 
 _xfail_manual_subgroup = pytest.mark.xfail(
     compat.OLD_JAX,
-    reason="XLA IsManualSubgroup abort in partial-manual shard_map on jaxlib 0.4.x",
+    reason="XLA IsManualSubgroup abort in partial-manual shard_map on jaxlib "
+    "0.4.x (re-probed 2026-08-09 on the 0.4.37 pin: subprocess still dies "
+    "SIGABRT with `Check failed: sharding.IsManualSubgroup()` for both "
+    "ef_allgather and ef_alltoall — marker stays until the pin moves)",
     strict=False,
 )
 

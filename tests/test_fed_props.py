@@ -1,0 +1,120 @@
+"""Property-based contracts for the federated tier's EF invariants.
+
+The three properties the ISSUE pins (``hypothesis`` is an optional dev
+dependency — the module skips cleanly when absent, the deterministic coverage
+in tests/test_fed.py still runs):
+
+1. EF conservation: over any gradient sequence, the decoded updates plus the
+   final residual telescope back to the raw gradient sum — for ANY compressor
+   (``e' + C⁻¹(C(p)) == p == u + e`` exactly, so the sum is conserved).
+2. Skip-k equivalence: a client's payload is a pure function of (update,
+   residual row); rows of non-sampled clients are carried bitwise, so a
+   client that skipped k rounds contributes exactly what it would have
+   contributed immediately.
+3. FedAvg weights are permutation-equivariant, normalized, and nonnegative.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+
+from repro.comm import compressed
+from repro.core.compressors import (
+    BlockScaledSignCompressor,
+    ScaledSignCompressor,
+    TopKCompressor,
+)
+from repro.fed import dataset_weights
+from repro.fed import server as fed_server
+
+pytestmark = pytest.mark.fed
+
+_BS = 32  # sign kernels need bucket_size % 32 == 0
+
+COMPRESSORS = st.sampled_from(
+    [ScaledSignCompressor(), BlockScaledSignCompressor(block=8), TopKCompressor(k=8)]
+)
+
+GRAD_SEQS = hnp.arrays(
+    np.float32,
+    st.tuples(st.integers(1, 5), st.integers(1, 4)).map(lambda t: (*t, _BS)),
+    # no subnormals: XLA flushes denormals to zero
+    elements=st.floats(-100.0, 100.0, width=32, allow_nan=False, allow_subnormal=False),
+)
+
+
+@hypothesis.given(COMPRESSORS, GRAD_SEQS)
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_ef_conservation_over_any_gradient_sequence(comp, grads):
+    # sum of applied (decoded) updates + final residual == sum of raw
+    # gradients, per dtype group — the paper's "no gradient is ever lost"
+    rounds, nb = grads.shape[0], grads.shape[1]
+    err = jnp.zeros((nb, _BS), jnp.float32)
+    applied = np.zeros((nb, _BS), np.float64)
+    for t in range(rounds):
+        payload, err, _ = compressed.ef_encode_buckets(comp, jnp.asarray(grads[t]), err)
+        applied += np.asarray(compressed.decode_buckets(comp, payload, _BS), np.float64)
+    total = applied + np.asarray(err, np.float64)
+    want = grads.astype(np.float64).sum(axis=0)
+    scale = np.abs(grads.astype(np.float64)).sum(axis=0).max() + 1.0
+    np.testing.assert_allclose(total, want, atol=2e-4 * scale)
+
+
+@hypothesis.given(
+    COMPRESSORS,
+    hnp.arrays(np.float32, (3, _BS),
+               elements=st.floats(-100.0, 100.0, width=32, allow_nan=False,
+                                  allow_subnormal=False)),
+    hnp.arrays(np.float32, (3, _BS),
+               elements=st.floats(-10.0, 10.0, width=32, allow_nan=False,
+                                  allow_subnormal=False)),
+    st.integers(1, 6),
+    st.integers(0, 7),
+)
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_skip_k_rounds_then_participate_is_bitwise_equivalent(comp, u, e, k, target):
+    # pool semantics: k rounds that never sample `target` carry its row
+    # bitwise; the payload it then ships equals the immediate encode
+    n, nb = 8, u.shape[0]
+    key = jax.random.PRNGKey(0)
+    pool = (jax.random.normal(key, (n, nb, _BS), jnp.float32),)
+    pool = fed_server.scatter_rows(pool, jnp.asarray([target]), (jnp.asarray(e)[None],))
+    row0 = np.asarray(pool[0][target])
+    others = [i for i in range(n) if i != target]
+    for r in range(k):
+        idx = jnp.asarray(others[r % len(others) : r % len(others) + 2], jnp.int32)
+        fresh = jnp.full((idx.shape[0], nb, _BS), float(r + 1), jnp.float32)
+        pool = fed_server.scatter_rows(pool, idx, (fresh,))
+    np.testing.assert_array_equal(np.asarray(pool[0][target]), row0)
+    direct_pay, direct_err, _ = compressed.ef_encode_buckets(
+        comp, jnp.asarray(u), jnp.asarray(e)
+    )
+    late_err_row = fed_server.gather_rows(pool, jnp.asarray([target]))[0][0]
+    late_pay, late_err, _ = compressed.ef_encode_buckets(comp, jnp.asarray(u), late_err_row)
+    for a, b in zip(jax.tree.leaves(direct_pay), jax.tree.leaves(late_pay)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(direct_err), np.asarray(late_err))
+
+
+@hypothesis.given(
+    st.lists(st.integers(1, 10_000), min_size=1, max_size=32),
+    st.randoms(use_true_random=False),
+)
+@hypothesis.settings(deadline=None)
+def test_dataset_weights_permutation_equivariant_and_normalized(sizes, rng):
+    sizes = np.asarray(sizes, np.float32)
+    perm = np.asarray(rng.sample(range(len(sizes)), len(sizes)))
+    w = np.asarray(dataset_weights(jnp.asarray(sizes)), np.float64)
+    wp = np.asarray(dataset_weights(jnp.asarray(sizes[perm])), np.float64)
+    assert (w >= 0.0).all() and (wp >= 0.0).all()
+    assert w.sum() == pytest.approx(1.0, abs=1e-5)
+    # permuting clients permutes their weights (up to summation-order ulps)
+    np.testing.assert_allclose(wp, w[perm], rtol=1e-5)
+    # weights are scale-invariant: only relative sizes matter
+    w2 = np.asarray(dataset_weights(jnp.asarray(sizes * 4.0)), np.float64)
+    np.testing.assert_allclose(w2, w, rtol=1e-5)

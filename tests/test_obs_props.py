@@ -82,6 +82,28 @@ def test_alltoall_model_is_sum_of_per_group_ceils(nbs, world):
 
 
 @hypothesis.given(
+    st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    st.sampled_from([32, 96, 4096]),
+    st.integers(1, 10_000),
+)
+def test_fed_wire_model_matches_closed_form(nbs, bucket_size, cohort):
+    layout = _layout(nbs, bucket_size)
+    comp = ScaledSignCompressor()
+    got = obs_telemetry.modeled_fed_wire_bytes(layout, cohort, comp)
+    # the sign family reduces to the closed form in core.aggregation
+    assert got == sum(
+        aggregation.fed_round_wire_bytes(nb, bucket_size, cohort) for nb in nbs
+    )
+    # linear in cohort (only sampled clients pay; no n_clients term at all),
+    # and a cohort of W-1 pays exactly the per-device receive bill of a
+    # W-worker ef_allgather — the fed tier IS that wire format server-side
+    assert got == cohort * obs_telemetry.modeled_fed_wire_bytes(layout, 1, comp)
+    assert got == obs_telemetry.modeled_wire_bytes(
+        "ef_allgather", layout, cohort + 1, comp
+    )
+
+
+@hypothesis.given(
     st.lists(st.floats(0.0, 1e9, width=32, allow_nan=False), min_size=1, max_size=5)
 )
 def test_to_host_roundtrips_every_field(group_vals):
