@@ -175,6 +175,109 @@ print(json.dumps(out))
 """
 
 
+_ROBUST_XCHG_DRIVER = r"""
+import os, json, time, statistics
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(world)d"
+import sys
+sys.path.insert(0, %(src)r)
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.comm import CommSpec, make_aggregator, bucketize, robust
+from repro.configs.base import ByzConfig
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+BUCKET, ITERS, WORLD = %(bucket)d, %(iters)d, %(world)d
+NB = 64
+mesh = make_host_mesh(data=WORLD, model=1)
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (NB * BUCKET,), jnp.float32)}
+layout = bucketize.build_layout(params, BUCKET)
+buckets_w = tuple(
+    jax.device_put(
+        jax.random.normal(jax.random.fold_in(key, gi), (WORLD, g.n_buckets, BUCKET)),
+        NamedSharding(mesh, P("data")))
+    for gi, g in enumerate(layout.groups))
+err_w = tuple(jnp.zeros_like(b) for b in buckets_w)
+
+def timeit(fn, *a):
+    for _ in range(2):
+        jax.block_until_ready(fn(*a))
+    xs = []
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        xs.append((time.perf_counter() - t0) * 1e6)
+    return {"median": statistics.median(xs), "min": min(xs)}
+
+out = {}
+with use_mesh(mesh):
+    for strategy in robust.ROBUST_STRATEGIES:
+        rec = {"timings": {}, "bitwise_equal": True}
+        ref = None
+        for backend in ("xla", "ring", "pallas_dma"):
+            spec = CommSpec(strategy=strategy, bucket_size=BUCKET, backend=backend,
+                            byz=ByzConfig(f=1))
+            agg = jax.jit(make_aggregator(spec, layout, mesh, ("data",)))
+            res = agg(buckets_w, err_w, (), key)
+            got = np.asarray(res[0][0])
+            if ref is None:
+                ref = got
+            elif not np.array_equal(ref, got):
+                rec["bitwise_equal"] = False
+            rec["timings"][backend] = timeit(lambda: agg(buckets_w, err_w, (), key))
+        out[strategy] = rec
+print(json.dumps(out))
+"""
+
+
+@register_bench("backends_robust_exchange", suites=("backends",))
+def backends_robust_exchange(ctx):
+    """PR 10 slot-native exchange: the robust strategies through every
+    transport — per-backend wall clocks plus the cross-backend bitwise
+    equality bit at W ∈ {4, 8} under a declared byz_f=1 budget (2f < W,
+    so W=2 has no robust cell; off-TPU the ``pallas_dma`` column measures
+    its documented ring degrade)."""
+    if jax.default_backend() != "cpu":
+        raise SkipBench("subprocess driver assumes CPU fake devices")
+    repo_src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    metrics = []
+    for world in (4, 8):
+        code = _ROBUST_XCHG_DRIVER % {
+            "src": repo_src, "bucket": BUCKET_SIZE, "world": world,
+            "iters": 3 if ctx.fast else 10,
+        }
+        proc = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True, timeout=1200,
+            env={**os.environ, "JAX_PLATFORMS": "cpu"},
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"robust backends driver (W={world}) failed: {proc.stderr[-2000:]}"
+            )
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        for strategy, rec in out.items():
+            cfg_d = {"world": world, "n_buckets": 64, "bucket_size": BUCKET_SIZE,
+                     "strategy": strategy, "byz_f": 1}
+            for backend, t in rec["timings"].items():
+                metrics.append(
+                    wall_metric(
+                        f"backends_robust_{strategy}_{backend}_w{world}",
+                        {**_t(t), "iters": 0},
+                        config=dict(cfg_d, backend=backend),
+                    )
+                )
+            metrics.append(
+                Metric(
+                    name=f"backends_robust_bitwise_{strategy}_w{world}",
+                    value=float(rec["bitwise_equal"]),
+                    metric="parity", unit="bool", config=cfg_d,
+                    direction="match", tolerance=0.0,
+                )
+            )
+    return metrics
+
+
 @register_bench("backends_exchange_latency", suites=("backends",))
 def backends_exchange_latency(ctx):
     """Measured payload-mean exchange per backend at W ∈ {2, 4, 8}

@@ -15,12 +15,17 @@ Run ``python -m repro.bench run --suite byz`` for the BENCH_byz.json artifact.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 
 from repro.bench.artifact import Metric
 from repro.bench.measure import bytes_metric
-from repro.bench.registry import register_bench
+from repro.bench.registry import SkipBench, register_bench
 from repro.comm import adversary, compressed, robust
 from repro.configs.base import ByzConfig
 from repro.core import aggregation
@@ -246,6 +251,97 @@ def byz_models(ctx):
                 ),
                 metric="bytes", unit="bytes", config=cfg_d,
                 direction="match", tolerance=0.0,
+            )
+        )
+    return metrics
+
+
+_BACKEND_PARITY_DRIVER = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(world)d"
+import sys
+sys.path.insert(0, %(src)r)
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.comm import CommSpec, make_aggregator, bucketize, robust
+from repro.configs.base import ByzConfig
+from repro.launch.mesh import make_host_mesh, use_mesh
+
+W = %(world)d
+mesh = make_host_mesh(data=W, model=1)
+rng = np.random.default_rng(11)
+tree = {"w": jnp.zeros((512,), jnp.float32)}
+layout = bucketize.build_layout(tree, 128)
+buckets = bucketize.flatten_buckets(layout, tree)
+grads = [tuple(jnp.asarray(rng.normal(size=(W,) + b.shape).astype(np.float32))
+               for b in buckets) for _ in range(5)]
+key = jax.random.PRNGKey(0)
+
+def run(strategy, backend, telemetry="off"):
+    spec = CommSpec(strategy=strategy, bucket_size=128, backend=backend,
+                    byz=ByzConfig(f=1), telemetry=telemetry)
+    with use_mesh(mesh):
+        agg = jax.jit(make_aggregator(spec, layout, mesh, ("data",)))
+        err = tuple(jnp.zeros_like(b) for b in grads[0])
+        outs = info = None
+        for g in grads:  # 5-step trajectory: EF residuals feed forward
+            outs, err, _, info = agg(g, err, (), key)
+        leaves = [np.asarray(x) for x in outs] + [np.asarray(x) for x in err]
+        return leaves, info
+
+out = {}
+for strategy in robust.ROBUST_STRATEGIES:
+    base, _ = run(strategy, "xla")
+    rec = {}
+    for backend in ("ring", "pallas_dma"):
+        got, _ = run(strategy, backend)
+        rec["parity_" + backend] = bool(
+            all(np.array_equal(a, b) for a, b in zip(base, got)))
+    lanes = []
+    for backend in ("xla", "ring", "pallas_dma"):
+        _, info = run(strategy, backend, telemetry="full")
+        lanes.append(tuple(float(x) for x in np.asarray(info.telemetry.filtered_lanes)))
+    rec["lanes_agree"] = len(set(lanes)) == 1
+    out[strategy] = rec
+print(json.dumps(out))
+"""
+
+
+@register_bench("byz_backend_parity", suites=("byz",))
+def byz_backend_parity(ctx):
+    """Robust × backend cells (PR 10 slot-native exchange): every robust
+    strategy's 5-step EF aggregator trajectory at W=4, byz_f=1 is bitwise-
+    equal on ring / pallas_dma (off-TPU degrade) to the xla gather, and the
+    telemetry filtered-lane weights agree across all three transports —
+    pinned as exact-match booleans."""
+    if jax.default_backend() != "cpu":
+        raise SkipBench("subprocess driver assumes CPU fake devices")
+    repo_src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    world = 4
+    code = _BACKEND_PARITY_DRIVER % {"src": repo_src, "world": world}
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=1200,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"byz backend-parity driver failed: {proc.stderr[-2000:]}")
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    metrics = []
+    for strategy, rec in out.items():
+        cfg_d = {"world": world, "bucket_size": 128, "strategy": strategy, "byz_f": 1}
+        for backend in ("ring", "pallas_dma"):
+            metrics.append(
+                _gate(
+                    f"byz_backend_parity_{strategy}_{backend}",
+                    rec[f"parity_{backend}"],
+                    config=dict(cfg_d, backend=backend),
+                )
+            )
+        metrics.append(
+            _gate(
+                f"byz_backend_lanes_agree_{strategy}",
+                rec["lanes_agree"],
+                config=cfg_d,
             )
         )
     return metrics

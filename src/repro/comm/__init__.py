@@ -22,11 +22,16 @@ every :class:`repro.core.compressors.Compressor`:
     is never reachable (collectives over a manual subgroup while other axes
     stay auto is exactly the broken configuration; see
     tests/test_distributed.py).
+``exchange``
+    :class:`PayloadStack` — the slot-native view every backend returns from
+    its exchange: read ``.mean()`` (fused fast path where the transport has
+    one) or ``.slots()``/``.decoded()`` (canonical origin-id worker stack).
 ``backends``
-    Pluggable transports for the payload-mean exchange — ``xla`` (lax
+    Pluggable transports for the slot-native payload exchange — ``xla`` (lax
     collectives), ``ring`` (double-buffered ppermute), ``pallas_dma``
     (in-kernel remote-DMA ring) — selected per mesh via
-    ``CommSpec.backend`` / ``backends.resolve``.
+    ``CommSpec.backend`` / ``backends.resolve``. All three serve both
+    readings, so the robust strategies ride every transport.
 ``errors``
     The one :class:`~repro.comm.errors.CommSpecError` taxonomy every
     construction-time rejection raises from.
@@ -43,9 +48,9 @@ The per-leaf strategies in :mod:`repro.core.aggregation` remain the
 the cost of per-leaf payloads and the partial-manual collective path.
 """
 
-# import order is cycle-load-bearing: bucketize/compressed are leaf modules,
-# robust sits on compressed, collective on both, backends on collective's
-# helpers, api on everything
+# import order is cycle-load-bearing: bucketize/compressed/exchange are leaf
+# modules, robust sits on compressed, collective on both, backends on
+# exchange + collective's helpers, api on everything
 from repro.comm.bucketize import (
     DEFAULT_BUCKET_SIZE,
     BucketLayout,
@@ -60,7 +65,9 @@ from repro.comm.compressed import (
     ef_encode_buckets,
     init_error_buckets,
     init_server_buckets,
+    is_sign,
 )
+from repro.comm.exchange import PayloadStack
 from repro.comm.errors import CommSpecError
 from repro.comm.robust import ROBUST_STRATEGIES, robust_combine, validate_tolerance
 from repro.comm.collective import STRATEGIES, make_bucketed_aggregator
@@ -74,6 +81,7 @@ __all__ = [
     "CommSpec",
     "CommSpecError",
     "DEFAULT_BUCKET_SIZE",
+    "PayloadStack",
     "ROBUST_STRATEGIES",
     "STRATEGIES",
     "build_layout",
@@ -83,6 +91,7 @@ __all__ = [
     "flatten_buckets",
     "init_error_buckets",
     "init_server_buckets",
+    "is_sign",
     "make_aggregator",
     "make_bucketed_aggregator",
     "resolve",

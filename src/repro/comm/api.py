@@ -44,7 +44,9 @@ class CommSpec:
     for the EF strategies). ``backend`` names a transport from
     ``repro.comm.backends.BACKENDS`` or ``"auto"`` (deterministic per mesh:
     ``ef_ring`` → ``ring``; ``ef_allgather`` on a TPU ring consults the
-    DMA-hop latency oracle for ``pallas_dma``; everything else → ``xla``).
+    DMA-hop latency oracle for ``pallas_dma``; everything else — including
+    the robust strategies, whose slot-native decode runs on every backend —
+    → ``xla``).
     ``bucket_size=None`` selects the per-leaf fallback path in
     ``repro.core.aggregation`` (train-step only; the bucketed aggregator
     itself always has a layout). ``telemetry`` turns on the in-graph
@@ -101,7 +103,7 @@ class CommSpec:
         if self.backend not in backends.BACKEND_CHOICES:
             backends.lookup(self.backend)  # raises UnknownBackendError w/ options
         comp = self.resolved_compressor or ScaledSignCompressor()
-        if self.strategy == "ef_alltoall" and not compressed._is_sign(comp):
+        if self.strategy == "ef_alltoall" and not compressed.is_sign(comp):
             raise WireFormatError("ef_alltoall supports sign compressors (wire format)")
         if self.overlap is not None and (self.strategy == "dense" or self.bucket_size is None):
             raise PathConfigError(
@@ -207,6 +209,7 @@ def make_aggregator(
             ef_axes,
             backend=backend,
             telemetry=spec.telemetry == "full",
+            byz_f=spec.byz_f,
         )
     return collective.build_bucketed_aggregator(
         spec.strategy,

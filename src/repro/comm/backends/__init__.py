@@ -3,25 +3,31 @@
 The registry behind :func:`repro.comm.api.make_aggregator`: the same
 strategy semantics can ride three transports, selected per mesh —
 
-``xla``         ``lax`` collectives (all-gather). Capability-complete: the
-                only backend that materializes the gathered per-worker stack
-                the robust strategies need. The default.
+``xla``         ``lax`` collectives (all-gather). The all-gather *is* the
+                slot stack; the mean reading decodes it. The default.
 ``ring``        W−1 double-buffered ``lax.ppermute`` hops (promoted from
-                ``overlap/ring.py``). Mean-only, single EF axis.
+                ``overlap/ring.py``). Fused per-hop mean; origin-id slot
+                gather for the robust reading. Single EF axis.
 ``pallas_dma``  the remote-DMA ring kernel (:mod:`repro.kernels.dma_ring`):
-                hops are ``make_async_remote_copy`` issued in-kernel and the
-                decode accumulates straight off the compressed slot words —
-                no dense per-worker gradient ever lands in HBM. Needs a real
-                TPU ring; :func:`resolve` substitutes ``ring`` elsewhere
+                hops are ``make_async_remote_copy`` issued in-kernel and
+                both readings stay in the compressed domain — no dense
+                per-worker gradient ever lands in HBM. Needs a real TPU
+                ring; :func:`resolve` substitutes ``ring`` elsewhere
                 (bitwise-equal result) and logs the reason.
 
-Every backend produces the bitwise-identical (nb, bs) mean (the parity tests
-pin it), so swapping transports never perturbs a training trajectory.
+Every backend exchanges payloads into one slot-native
+:class:`~repro.comm.exchange.PayloadStack` view, and both readings — the
+(nb, bs) mean and the canonical (W, ...) slot stack — are bitwise-identical
+across transports (the parity tests pin it), so swapping backends never
+perturbs a training trajectory, mean-path or robust.
 ``backend="auto"`` resolves deterministically: ``ef_ring`` → ``ring``,
 everything else → ``xla``, except on a TPU mesh where the DMA-hop latency
 model in :mod:`repro.core.aggregation` acts as the accept/reject oracle for
-promoting the mean exchange to ``pallas_dma`` (see :func:`recommend_backend`;
-the ``backends`` bench suite gates the model).
+promoting the ``ef_allgather`` mean exchange to ``pallas_dma`` (see
+:func:`recommend_backend`; the ``backends`` bench suite gates the model).
+The robust strategies stay on ``xla`` under ``auto`` — their decode reads
+the full slot stack anyway, so the one-collective gather is the
+conservative default — but every backend accepts them explicitly.
 """
 
 from __future__ import annotations
@@ -30,11 +36,20 @@ import logging
 
 import jax
 
-from repro.comm.backends.base import MEAN_STRATEGIES, CollectiveBackend
+from repro.comm.backends.base import (
+    EXCHANGE_STRATEGIES,
+    MEAN_STRATEGIES,
+    CollectiveBackend,
+)
 from repro.comm.backends.pallas_dma import PallasDmaBackend
-from repro.comm.backends.ring import RingBackend, ring_axis, ring_decode_mean
+from repro.comm.backends.ring import (
+    RingBackend,
+    ring_axis,
+    ring_decode_mean,
+    ring_gather_slots,
+)
 from repro.comm.backends.xla import XlaBackend, gather_payload
-from repro.comm.errors import BackendCapabilityError, UnknownBackendError
+from repro.comm.errors import BackendCapabilityError, CommSpecError, UnknownBackendError
 
 logger = logging.getLogger(__name__)
 
@@ -79,9 +94,11 @@ def _auto_backend(spec, mesh, ef_axes, layout) -> str:
     if spec.strategy == "ef_ring":
         return "ring"
     if spec.strategy != "ef_allgather":
-        return "xla"  # psum / all-to-all shapes; no payload-mean hop structure
+        # psum / all-to-all shapes (no payload hop structure) and the robust
+        # slot readers: one-collective gather is the conservative default
+        return "xla"
     comp = spec.resolved_compressor
-    sign = comp is None or compressed._is_sign(comp)
+    sign = comp is None or compressed.is_sign(comp)
     if (
         BACKENDS["pallas_dma"].available()
         and layout is not None
@@ -112,25 +129,59 @@ def resolve(spec, mesh, ef_axes=(), *, layout=None) -> CollectiveBackend:
             jax.default_backend(),
         )
         be = BACKENDS["ring"]
-    if spec.strategy not in MEAN_STRATEGIES and be.name != "xla":
+    if spec.strategy not in EXCHANGE_STRATEGIES and be.name != "xla":
         raise BackendCapabilityError(
-            f"strategy {spec.strategy!r} has no payload-mean hop structure to "
-            f"re-route (backends apply to {MEAN_STRATEGIES}); it runs on the "
+            f"strategy {spec.strategy!r} has no payload exchange to re-route "
+            f"(backends apply to {EXCHANGE_STRATEGIES}); it runs on the "
             "'xla' backend only"
         )
     be.check(spec.strategy, spec.resolved_compressor, ef_axes, mesh)
     return be
 
 
+def capability_matrix(mesh, ef_axes: tuple[str, ...] = ("data",), comp=None) -> dict:
+    """strategy × backend capability table, post-resolution semantics.
+
+    Returns ``{strategy: {backend: cell}}`` where a cell is ``"ok"``,
+    ``"ok (degrades to 'ring' here)"`` for an unavailable ``pallas_dma``
+    that :func:`resolve` would substitute, or ``"-- <reason>"`` quoting the
+    :class:`~repro.comm.errors.CommSpecError` the combination raises.
+    ``comp=None`` probes each strategy's default (sign) wire format. Used by
+    ``launch/dryrun.py`` to surface misconfigurations before compile.
+    """
+    from repro.comm import collective
+
+    out: dict[str, dict[str, str]] = {}
+    for strategy in collective.STRATEGIES:
+        row = {}
+        for name, be in BACKENDS.items():
+            try:
+                if strategy not in EXCHANGE_STRATEGIES and name != "xla":
+                    raise BackendCapabilityError("no payload exchange to re-route; xla only")
+                be.check(strategy, comp, ef_axes, mesh)
+            except CommSpecError as e:
+                row[name] = f"-- {e}"
+            else:
+                if name == "pallas_dma" and not be.available():
+                    row[name] = "ok (degrades to 'ring' here)"
+                else:
+                    row[name] = "ok"
+        out[strategy] = row
+    return out
+
+
 __all__ = [
     "BACKENDS",
     "BACKEND_CHOICES",
     "CollectiveBackend",
+    "EXCHANGE_STRATEGIES",
     "MEAN_STRATEGIES",
+    "capability_matrix",
     "gather_payload",
     "lookup",
     "recommend_backend",
     "resolve",
     "ring_axis",
     "ring_decode_mean",
+    "ring_gather_slots",
 ]

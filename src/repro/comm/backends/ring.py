@@ -21,22 +21,26 @@ Mechanics per hop (``lax.ppermute`` to the next worker on the ring):
 
 The payload stays **sign-compressed on the wire for every hop** — workers
 circulate the original payloads rather than partial sums, so nothing is
-ever re-compressed and the result is BITWISE equal to the all-gather path
-on every worker:
+ever re-compressed and both readings of the exchange are BITWISE equal to
+the all-gather path on every worker:
 
-* ``W ≤ 2`` — per-hop fused decompress-accumulate (the Pallas kernel
-  ``kernels.ops.bucket_sign_accumulate``): with at most one remote payload
-  the (own + arrival) sum is commutative, so every worker associates
+* mean reading, ``W ≤ 2`` — per-hop fused decompress-accumulate (the Pallas
+  kernel ``kernels.ops.bucket_sign_accumulate``): with at most one remote
+  payload the (own + arrival) sum is commutative, so every worker associates
   identically and the decode cost rides the hop instead of piling up at
   the end.
-* ``W ≥ 3`` — arrival orders are per-worker *rotations*; accumulating in
-  arrival order would leave each worker a differently-associated fp32 sum,
-  and params the sharding layer believes are replicated (out_specs ``P()``)
-  would silently drift apart over a run. Arrivals are therefore stored into
-  canonical origin-id slots (same layout ``lax.all_gather`` produces) and
-  decoded by the exact decode-mean the all-gather strategy uses — identical
-  association on every worker, while the wire still moves as W−1
-  double-buffered hops the overlap schedule can slide under compute.
+* mean reading, ``W ≥ 3`` — arrival orders are per-worker *rotations*;
+  accumulating in arrival order would leave each worker a differently-
+  associated fp32 sum, and params the sharding layer believes are replicated
+  (out_specs ``P()``) would silently drift apart over a run. Arrivals are
+  therefore stored into canonical origin-id slots (same layout
+  ``lax.all_gather`` produces) and decoded by the exact decode-mean the
+  all-gather strategy uses — identical association on every worker, while
+  the wire still moves as W−1 double-buffered hops the overlap schedule can
+  slide under compute.
+* slot reading (:func:`ring_gather_slots`) — the same origin-id slot store
+  for any W; the robust strategies consume it directly, so they ride the
+  ring's hop structure with no extra wire.
 """
 
 from __future__ import annotations
@@ -44,7 +48,7 @@ from __future__ import annotations
 import jax
 from jax import lax
 
-from repro.comm import compressed
+from repro.comm import compressed, exchange
 from repro.comm.backends.base import CollectiveBackend
 from repro.comm.errors import BackendCapabilityError
 from repro.core.compressors import Compressor
@@ -65,11 +69,43 @@ def ring_axis(ef_axes: AxisNames) -> str:
 def _accumulate(
     comp: Compressor, acc: jax.Array, payload: compressed.BucketPayload, bucket_size: int
 ) -> jax.Array:
-    if compressed._is_sign(comp):
+    if compressed.is_sign(comp):
         from repro.kernels import ops
 
         return ops.bucket_sign_accumulate(acc, payload.data["words"], payload.data["scale"])
     return acc + compressed.decode_buckets(comp, payload, bucket_size)
+
+
+def ring_gather_slots(
+    payload: compressed.BucketPayload, ef_axes: AxisNames, world: int
+) -> compressed.BucketPayload:
+    """W−1 double-buffered ppermute hops → canonical origin-id slot stack.
+
+    Every payload leaf gains a leading (W,) axis holding worker *i*'s payload
+    at index *i* — the exact layout ``lax.all_gather`` produces, assembled
+    from per-hop units instead of one collective. Hop *t*'s arrival
+    originated at ``(widx − t − 1) mod W``; storing by origin id is what
+    makes the stack worker-invariant (replication-safe downstream decodes).
+    """
+    axis = ring_axis(ef_axes)
+    perm = [(i, (i + 1) % world) for i in range(world)]
+    widx = lax.axis_index(axis)
+    inflight = payload
+    slots = jax.tree.map(lambda x: jax.numpy.zeros((world,) + x.shape, x.dtype), payload.data)
+
+    def store(slots, data, origin):
+        return jax.tree.map(
+            lambda s, x: lax.dynamic_update_index_in_dim(s, x, origin, 0), slots, data
+        )
+
+    slots = store(slots, inflight.data, widx)
+    for t in range(world - 1):
+        nxt = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), inflight.data)
+        # the store overlaps the next hop's DMA just like the fused
+        # accumulate of the mean path does
+        slots = store(slots, nxt, (widx - t - 1) % world)
+        inflight = compressed.BucketPayload(data=nxt)
+    return compressed.BucketPayload(data=slots)
 
 
 def ring_decode_mean(
@@ -106,43 +142,39 @@ def ring_decode_mean(
 
     # W ≥ 3: canonical origin-id slots + the all-gather path's own decode,
     # so every worker associates the fp32 sum identically (replication-safe)
-    widx = lax.axis_index(axis)
-    slots = jax.tree.map(lambda x: jax.numpy.zeros((world,) + x.shape, x.dtype), payload.data)
-
-    def store(slots, data, origin):
-        return jax.tree.map(
-            lambda s, x: lax.dynamic_update_index_in_dim(s, x, origin, 0), slots, data
-        )
-
-    slots = store(slots, inflight.data, widx)
-    for t in range(world - 1):
-        nxt = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), inflight.data)
-        # arrival of hop t came from worker (widx − t − 1) mod W; the store
-        # overlaps the next hop's DMA just like the fused accumulate did
-        slots = store(slots, nxt, (widx - t - 1) % world)
-        inflight = compressed.BucketPayload(data=nxt)
-    return compressed.decode_mean_buckets(comp, compressed.BucketPayload(data=slots), bucket_size)
+    return compressed.decode_mean_buckets(
+        comp, ring_gather_slots(payload, ef_axes, world), bucket_size
+    )
 
 
 class RingBackend(CollectiveBackend):
     """``lax.ppermute`` double-buffered ring — W−1 per-hop payload units."""
 
     name = "ring"
-    supports_stack = False
+    fused_mean = True
 
     def check(self, strategy: str, comp: Compressor, ef_axes: AxisNames, mesh) -> None:
         super().check(strategy, comp, ef_axes, mesh)
         ring_axis(ef_axes)  # single-axis EF world required
 
-    def decode_mean(
+    def exchange(
         self,
-        comp: Compressor,
+        comp: Compressor | None,
         payload: compressed.BucketPayload,
         bucket_size: int,
         ef_axes: AxisNames,
         world: int,
-    ) -> jax.Array:
+    ) -> exchange.PayloadStack:
         from repro.obs import trace
 
-        with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
-            return ring_decode_mean(comp, payload, bucket_size, ef_axes, world)
+        def mean_fn():
+            with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
+                return ring_decode_mean(comp, payload, bucket_size, ef_axes, world)
+
+        def slots_fn():
+            with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
+                return ring_gather_slots(payload, ef_axes, world)
+
+        return exchange.PayloadStack(
+            comp, bucket_size, world, slots_fn=slots_fn, mean_fn=mean_fn
+        )

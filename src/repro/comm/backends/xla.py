@@ -2,9 +2,11 @@
 
 This is the transport ``ef_allgather`` (and the robust strategies riding its
 wire) always used — promoted behind the backend seam so the ring and DMA
-transports are drop-in replacements for the mean path. It is also the only
-backend that materializes the gathered per-worker stack, which the robust
-order-statistics combiners require.
+transports are drop-in replacements. The all-gather *is* the slot stack:
+``exchange`` gathers eagerly and returns the materialized
+:class:`~repro.comm.exchange.PayloadStack`, whose mean reading is the
+canonical ``decode_mean_buckets`` over it — the exact gather-then-decode
+program of the pre-slot-native ``decode_mean``.
 """
 
 from __future__ import annotations
@@ -12,7 +14,7 @@ from __future__ import annotations
 import jax
 from jax import lax
 
-from repro.comm import compressed
+from repro.comm import compressed, exchange
 from repro.comm.backends.base import CollectiveBackend
 from repro.core.compressors import Compressor
 from repro.obs import trace
@@ -30,22 +32,16 @@ class XlaBackend(CollectiveBackend):
     transport on every mesh."""
 
     name = "xla"
-    supports_stack = True
+    fused_mean = False
 
-    def decode_mean(
+    def exchange(
         self,
-        comp: Compressor,
+        comp: Compressor | None,
         payload: compressed.BucketPayload,
         bucket_size: int,
         ef_axes: AxisNames,
         world: int,
-    ) -> jax.Array:
+    ) -> exchange.PayloadStack:
         with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
             gathered = gather_payload(payload, ef_axes)
-        return compressed.decode_mean_buckets(comp, gathered, bucket_size)
-
-    def gather_stack(
-        self, payload: compressed.BucketPayload, ef_axes: AxisNames
-    ) -> compressed.BucketPayload:
-        with trace.span(f"{trace.SPAN_COLLECTIVE}.{self.name}"):
-            return gather_payload(payload, ef_axes)
+        return exchange.PayloadStack(comp, bucket_size, world, slots=gathered)

@@ -30,21 +30,24 @@ Strategies (mirroring ``repro.core.aggregation``):
                    Wire ≈ 2·d/8 bytes, W-independent.
 ``majority_vote``  sign-of-sum-of-signs, no EF (the known-brittle baseline).
 ``ef_coord_median`` / ``ef_trimmed_mean`` / ``ef_norm_filter``
-                   Byzantine-robust variants: identical payloads, all-gather
-                   and wire bill as ef_allgather, but the decode combines the
-                   per-worker stack with an order-statistics estimator
+                   Byzantine-robust variants: identical payloads and wire
+                   bill as ef_allgather, but the decode combines the
+                   per-worker slot stack with an order-statistics estimator
                    (:mod:`repro.comm.robust`) parameterized by the declared
-                   adversary budget ``byz_f``. ``byz_f=0`` is bitwise-equal
-                   to ef_allgather.
+                   adversary budget ``byz_f``. Rides ANY backend's slot
+                   exchange (all-gather, ppermute ring, remote-DMA ring);
+                   ``byz_f=0`` is bitwise-equal to ef_allgather.
 
 Wire accounting is exact per bucket: a payload for one bucket costs
 ``comp.wire_bits(bucket_size)`` bits and every strategy counts how many
 bucket payloads each device *receives* per step.
 
-The payload-mean exchange itself (the hop structure of ef_allgather /
-ef_ring) is delegated to a pluggable :class:`~repro.comm.backends.CollectiveBackend`
-— strategy semantics (EF residual updates, wire accounting, robust combines)
-stay here; backends only move bytes. Construct through
+The payload exchange itself (the hop structure of ef_allgather / ef_ring /
+the robust strategies) is delegated to a pluggable
+:class:`~repro.comm.backends.CollectiveBackend`, which returns one slot-native
+:class:`~repro.comm.exchange.PayloadStack` view per dtype group — strategy
+semantics (EF residual updates, wire accounting, robust combines) stay here;
+backends only move bytes. Construct through
 :func:`repro.comm.api.make_aggregator`; the kwarg factory below is a
 deprecated shim.
 """
@@ -216,22 +219,23 @@ def build_bucketed_aggregator(
                 payload, ne, d_b = compressed.ef_encode_buckets(
                     comp, b, e, mask=masks[gi], key=gkey
                 )
-                if strategy in robust.ROBUST_STRATEGIES:
-                    # same payloads, same wire bill — robustness is decode-side,
-                    # which is why it needs the backend's full gathered stack
-                    gathered = backend.gather_stack(payload, ef_axes)
-                    if telemetry and byz_f:
-                        # decode the stack once, feed both the combine and the
-                        # per-lane filter weights — same ops as robust_combine
-                        stack = compressed.decode_buckets_stack(comp, gathered, bs)
-                        outs.append(robust.combine_stack(strategy, stack, byz_f))
-                        lane_w = lane_w + robust.filtered_lane_weights(strategy, stack, byz_f)
-                    else:
-                        outs.append(robust.robust_combine(strategy, comp, gathered, bs, byz_f))
+                # ONE slot-native exchange per transport (all-gather /
+                # ppermute / remote DMA); the consumer's reading below decides
+                # whether the view traces the fused mean or the slot stack
+                view = backend.exchange(comp, payload, bs, ef_axes, w)
+                if strategy in robust.ROBUST_STRATEGIES and byz_f and telemetry:
+                    # decode the stack once, feed both the combine and the
+                    # per-lane filter weights — same ops as combine_view
+                    stack = view.decoded()
+                    outs.append(robust.combine_stack(strategy, stack, byz_f))
+                    lane_w = lane_w + robust.filtered_lane_weights(strategy, stack, byz_f)
+                elif strategy in robust.ROBUST_STRATEGIES:
+                    # byz_f == 0 collapses to view.mean() — the declared-honest
+                    # trajectory stays bitwise-equal to ef_allgather/ef_ring on
+                    # every backend
+                    outs.append(robust.combine_view(strategy, view, byz_f))
                 else:
-                    # the payload-mean exchange: the one point where the
-                    # transport (all-gather / ppermute / remote DMA) differs
-                    outs.append(backend.decode_mean(comp, payload, bs, ef_axes, w))
+                    outs.append(view.mean())
                 new_errs.append(ne[None])
                 dens.append(jnp.mean(d_b))
                 err_norms.append(obs_telemetry.residual_l2(ne))

@@ -69,8 +69,16 @@ def init_server_buckets(layout, world: int) -> tuple[jax.Array, ...]:
     )
 
 
-def _is_sign(comp: Compressor) -> bool:
+def is_sign(comp: Compressor) -> bool:
+    """Whether ``comp`` ships the packed sign wire format (``words``/``scale``
+    payloads) — the family the fused bucket kernels and the DMA ring decode.
+    Public since PR 10; call sites should prefer this over the old private
+    ``_is_sign`` name."""
     return isinstance(comp, _SIGN_TYPES)
+
+
+# legacy private alias (pre-PR 10 call sites)
+_is_sign = is_sign
 
 
 def ef_encode_buckets(
@@ -97,7 +105,7 @@ def ef_encode_buckets(
     """
     nb, bs = buckets.shape
     with trace.span(trace.SPAN_COMPRESS):
-        if _is_sign(comp):
+        if is_sign(comp):
             fixed = None if isinstance(comp, ScaledSignCompressor) else comp.scale
             words, scales, new_err, dens = ops.ef_sign_bucket_step(buckets, err, fixed_scale=fixed)
             payload = BucketPayload(data={"words": words, "scale": scales})
@@ -125,7 +133,7 @@ def ef_encode_buckets(
 def decode_buckets(comp: Compressor, payload: BucketPayload, bucket_size: int) -> jax.Array:
     """payload → (n_buckets, bucket_size) fp32 reconstruction."""
     with trace.span(trace.SPAN_DECODE):
-        if _is_sign(comp):
+        if is_sign(comp):
             return ops.bucket_sign_decode(payload.data["words"], payload.data["scale"], bucket_size)
         return jax.vmap(lambda pay: comp.decompress(pay, bucket_size))(payload.data)
 
@@ -151,7 +159,7 @@ def decode_mean_buckets(comp: Compressor, gathered: BucketPayload, bucket_size: 
     bucket_size) fp32 — the all-gather decode hot loop of dist-EF-SGD.
     """
     with trace.span(trace.SPAN_DECODE):
-        if _is_sign(comp):
+        if is_sign(comp):
             return ops.bucket_decompress_mean(gathered.data["words"], gathered.data["scale"])
         w = jax.tree.leaves(gathered.data)[0].shape[0]
 

@@ -11,10 +11,12 @@ class names make the failure *kind* programmatic:
 
 ``UnknownStrategyError``     strategy name not in ``comm.collective.STRATEGIES``
 ``UnknownBackendError``      backend name not in ``comm.backends.BACKENDS``
-``BackendCapabilityError``   backend exists but cannot run this spec (robust
-                             strategies over the mean-only ring/DMA paths,
-                             multi-axis EF worlds on a ring, non-sign wire
-                             formats on the DMA kernel, ...)
+``BackendCapabilityError``   backend exists but cannot run this spec (a
+                             backend declaring ``supports_slots=False`` asked
+                             for a robust strategy, multi-axis EF worlds on a
+                             ring, non-sign wire formats on the DMA kernel,
+                             a non-exchange strategy re-routed off ``xla``,
+                             ...)
 ``ToleranceError``           declared Byzantine budget out of range (the
                              ``2f >= W`` breakdown, negative ``byz_f``, or a
                              budget on a non-robust strategy)

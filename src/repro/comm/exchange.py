@@ -1,0 +1,108 @@
+"""The slot-native exchange view: one payload exchange, two readings.
+
+:class:`PayloadStack` is what every collective backend returns from its
+``exchange()``: a *view* of this worker's payload exchanged with all W
+workers, readable either as the canonical origin-id slot stack (leading
+``(W,)`` axis per leaf, the layout ``lax.all_gather`` produces — what the
+Byzantine-robust order statistics consume) or as the decoded ``(nb, bs)``
+fp32 mean (what the EF mean strategies consume).
+
+The view is lazy where the transport allows it: everything here happens
+under a jax trace, so a reading that is never taken traces *nothing* — a
+mean-only consumer of a ring exchange gets exactly the fused per-hop
+accumulate program it always got (the backend supplies it as ``mean_fn``),
+and the slot gather is simply absent from the compiled program. That is the
+mechanism by which retiring the old ``decode_mean``/``gather_stack`` split
+keeps every mean-path program bitwise-unchanged while making the slot stack
+available on every transport.
+
+Construction per backend:
+
+* slot transports (``xla``) gather eagerly at exchange time and hand the
+  materialized stack in as ``slots``; the mean reading is the canonical
+  ``decode_mean_buckets`` over it.
+* fused transports (``ring``, ``pallas_dma``) hand in both a ``slots_fn``
+  (origin-id slot gather) and a ``mean_fn`` (their fused transport+decode
+  kernel); the consumer's first reading decides which one is traced.
+
+Readings are memoized, so telemetry reading ``decoded()`` next to a robust
+combine traces the slot gather once and XLA CSE sees one collective.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.comm import compressed
+from repro.core.compressors import Compressor
+
+
+class PayloadStack:
+    """View of one exchanged bucket-payload stack (see module docstring).
+
+    ``world`` is the static EF world size W; ``comp``/``bucket_size`` are
+    what the decode readings need. Exactly one of ``slots`` (materialized
+    :class:`~repro.comm.compressed.BucketPayload` with a leading (W,) axis
+    per leaf) or ``slots_fn`` (thunk producing it) must be given; ``mean_fn``
+    optionally supplies a fused mean fast path that bypasses the slot stack.
+    """
+
+    def __init__(
+        self,
+        comp: Compressor | None,
+        bucket_size: int,
+        world: int,
+        *,
+        slots: compressed.BucketPayload | None = None,
+        slots_fn: Callable[[], compressed.BucketPayload] | None = None,
+        mean_fn: Callable[[], jax.Array] | None = None,
+    ):
+        if (slots is None) == (slots_fn is None):
+            raise ValueError("PayloadStack needs exactly one of slots= / slots_fn=")
+        self.comp = comp
+        self.bucket_size = bucket_size
+        self.world = world
+        self._slots = slots
+        self._slots_fn = slots_fn
+        self._mean_fn = mean_fn
+        self._decoded: jax.Array | None = None
+        self._mean: jax.Array | None = None
+
+    @property
+    def fused_mean(self) -> bool:
+        """Whether the mean reading bypasses the slot stack entirely."""
+        return self._mean_fn is not None
+
+    def slots(self) -> compressed.BucketPayload:
+        """The canonical origin-id slot stack: a ``BucketPayload`` whose
+        leaves carry a leading (W,) worker axis, identical on every worker
+        regardless of transport (the parity tests pin it)."""
+        if self._slots is None:
+            self._slots = self._slots_fn()
+        return self._slots
+
+    def decoded(self) -> jax.Array:
+        """Per-worker reconstructions: (W, nb, bs) fp32 — the robust
+        order-statistics input. Memoized so a combine and the telemetry
+        lane weights share one decode."""
+        if self._decoded is None:
+            self._decoded = compressed.decode_buckets_stack(
+                self.comp, self.slots(), self.bucket_size
+            )
+        return self._decoded
+
+    def mean(self) -> jax.Array:
+        """The decoded (nb, bs) fp32 mean over all W workers — collapses to
+        the backend's fused kernel when one was supplied, else the canonical
+        ``decode_mean_buckets`` over the slot stack. Bitwise-identical across
+        backends either way."""
+        if self._mean is None:
+            if self._mean_fn is not None:
+                self._mean = self._mean_fn()
+            else:
+                self._mean = compressed.decode_mean_buckets(
+                    self.comp, self.slots(), self.bucket_size
+                )
+        return self._mean

@@ -1,14 +1,16 @@
 """Byzantine-robust combination of per-worker bucket payloads.
 
 The robust strategies (``ef_coord_median``, ``ef_trimmed_mean``,
-``ef_norm_filter``) reuse the ``ef_allgather`` exchange wholesale: every
-worker runs the same per-bucket EF compression, payloads ride the same
-all-gather, and the wire bill is identical — robustness is purely a
-*decode-side* change. Instead of the two-buffer running mean of
-``compressed.decode_mean_buckets``, the combiner materializes the full
-``(W, n_buckets, bucket_size)`` stack of per-worker reconstructions and
-applies an order-statistics estimator over the worker axis (Ghosh et al.,
-arXiv:1911.09721 — error feedback composes with robust aggregation):
+``ef_norm_filter``) reuse the EF payload exchange wholesale: every worker
+runs the same per-bucket EF compression, payloads ride the same slot-native
+backend exchange (all-gather, ppermute ring, or remote-DMA ring — the
+estimators are backend-agnostic), and the wire bill is identical —
+robustness is purely a *decode-side* change. Instead of the two-buffer
+running mean of ``compressed.decode_mean_buckets``, the combiner reads the
+exchange's canonical ``(W, n_buckets, bucket_size)`` slot stack of
+per-worker reconstructions and applies an order-statistics estimator over
+the worker axis (Ghosh et al., arXiv:1911.09721 — error feedback composes
+with robust aggregation):
 
 ``ef_coord_median``
     coordinate-wise median (even W: mean of the two middle order
@@ -25,12 +27,13 @@ arXiv:1911.09721 — error feedback composes with robust aggregation):
 ``byz_f`` is the *declared* adversary budget, a static config — separate
 from how many lanes the fault injector (:mod:`repro.comm.adversary`)
 actually corrupts; the byz bench measures over- and under-declared budgets.
-At ``byz_f == 0`` every strategy short-circuits to the literal
-``decode_mean_buckets`` call of the ``ef_allgather`` branch, so a robust
-strategy in a declared-honest world is bitwise-equal to ``ef_allgather`` by
-construction. The order-statistics estimators break down at ``2f >= W``
-(fewer honest than adversarial order statistics), which
-:func:`validate_tolerance` rejects upfront.
+At ``byz_f == 0`` every strategy short-circuits to the exchange view's mean
+reading — the very program the mean strategies trace on that backend — so a
+robust strategy in a declared-honest world is bitwise-equal to
+``ef_allgather`` / ``ef_ring`` on every transport by construction. The
+order-statistics estimators break down at ``2f >= W`` (fewer honest than
+adversarial order statistics), which :func:`validate_tolerance` rejects
+upfront.
 """
 
 from __future__ import annotations
@@ -143,9 +146,7 @@ def filtered_lane_weights(strategy: str, stack: jax.Array, byz_f: int) -> jax.Ar
     if strategy == "ef_trimmed_mean":
         ranks = jnp.argsort(jnp.argsort(stack, axis=0), axis=0)
         dropped = (ranks < byz_f) | (ranks >= w - byz_f)
-        return jnp.mean(
-            dropped.astype(jnp.float32), axis=tuple(range(1, stack.ndim))
-        )
+        return jnp.mean(dropped.astype(jnp.float32), axis=tuple(range(1, stack.ndim)))
     if strategy == "ef_norm_filter":
         center = coord_median(stack)
         d2 = jnp.sum((stack - center[None]) ** 2, axis=tuple(range(1, stack.ndim)))
@@ -153,6 +154,21 @@ def filtered_lane_weights(strategy: str, stack: jax.Array, byz_f: int) -> jax.Ar
         keep = jnp.zeros((w,), jnp.float32).at[order[: w - byz_f]].set(1.0)
         return 1.0 - keep
     raise ValueError(f"unknown robust strategy {strategy!r}; options: {ROBUST_STRATEGIES}")
+
+
+def combine_view(strategy: str, view, byz_f: int) -> jax.Array:
+    """Robustly combine one slot-native exchange into a (nb, bs) fp32 update.
+
+    ``view`` is the :class:`repro.comm.exchange.PayloadStack` a backend's
+    ``exchange()`` returned. ``byz_f == 0`` collapses to ``view.mean()`` —
+    the backend's fused mean fast path where it has one — so the
+    declared-honest trajectory stays bitwise-equal to ``ef_allgather`` /
+    ``ef_ring`` on that transport; otherwise the estimator reads the decoded
+    slot stack.
+    """
+    if byz_f == 0:
+        return view.mean()
+    return combine_stack(strategy, view.decoded(), byz_f)
 
 
 def robust_combine(
@@ -164,10 +180,11 @@ def robust_combine(
 ) -> jax.Array:
     """Robustly combine W gathered payloads into one (nb, bs) fp32 update.
 
-    ``gathered`` leaves carry a leading (W,) worker axis — exactly what the
-    ``ef_allgather`` branch holds after its all-gather. ``byz_f == 0`` takes
-    the literal decode-mean path so the declared-honest trajectory stays
-    bitwise-equal to ``ef_allgather``.
+    The payload-level variant of :func:`combine_view` for callers that hold a
+    raw gathered stack rather than an exchange view (the byz bench's
+    meshless convergence harness, property tests). ``gathered`` leaves carry
+    a leading (W,) worker axis. ``byz_f == 0`` takes the literal decode-mean
+    path so the declared-honest combine stays bitwise-equal to the mean.
     """
     if byz_f == 0:
         return compressed.decode_mean_buckets(comp, gathered, bucket_size)

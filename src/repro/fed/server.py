@@ -45,7 +45,7 @@ def weighted_combine(
     if weights is None:
         return compressed.decode_mean_buckets(comp, payload_c, bucket_size)
     c = weights.shape[0]
-    if compressed._is_sign(comp):
+    if compressed.is_sign(comp):
         scaled = payload_c.data["scale"] * (weights * c)[:, None]
         return ops.bucket_decompress_mean(payload_c.data["words"], scaled)
 

@@ -207,6 +207,28 @@ def dma_ring_gather_slots(
     return slot_w, slot_s
 
 
+def dma_ring_slot_stack(
+    words: jax.Array,
+    scales: jax.Array,
+    ef_axes: AxisNames,
+    world: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Remote-DMA ring exchange → canonical origin-id slot stacks.
+
+    The slot-native backend entry point (``PayloadStack.slots()`` on the
+    ``pallas_dma`` backend): gather every worker's compressed payload into
+    ``((W, nb, bs/32) u32, (W, nb) f32)`` — the exact all-gather layout,
+    still in the wire format, so the robust order statistics decode from
+    slots the dense gradient never touched. ``dma_ring_slots_ref`` is the
+    hop-by-hop oracle; the stack is worker-invariant by construction.
+    """
+    axis = ef_axes[0]  # single-axis ring, validated at spec time
+    widx = lax.axis_index(axis)
+    return dma_ring_gather_slots(widx, words, scales, world=world, interpret=interpret)
+
+
 def dma_ring_decode_mean(
     words: jax.Array,
     scales: jax.Array,
@@ -226,8 +248,6 @@ def dma_ring_decode_mean(
 
     axis = ef_axes[0]  # single-axis ring, validated at spec time
     widx = lax.axis_index(axis)
-    slot_w, slot_s = dma_ring_gather_slots(
-        widx, words, scales, world=world, interpret=interpret
-    )
+    slot_w, slot_s = dma_ring_gather_slots(widx, words, scales, world=world, interpret=interpret)
     force = "pallas" if interpret and jax.default_backend() != "tpu" else None
     return ops.bucket_decompress_mean(slot_w, slot_s, force=force)

@@ -45,6 +45,12 @@ ICI_BW = 50e9
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
 
 
+def _cap_cell(cell: str, width: int = 40) -> str:
+    """One capability-matrix cell for terminal display: rejection reasons can
+    quote a full CommSpecError — keep the first clause, mark the cut."""
+    return cell if len(cell) <= width else cell[: width - 3] + "..."
+
+
 def _mem_dict(mem) -> dict:
     keys = (
         "argument_size_in_bytes",
@@ -124,6 +130,7 @@ def lower_combo(
         # what a real (bucketed) run of this combo will record: the telemetry
         # field table and each strategy's exact per-device wire bill at the
         # default bucket size — the dry run documents the run-record contract
+        from repro.comm import backends as comm_backends
         from repro.comm import bucketize as comm_bucketize
         from repro.comm import collective as comm_collective
         from repro.obs import telemetry as obs_telemetry
@@ -135,6 +142,12 @@ def lower_combo(
             "ef_world": world,
             "bucket_size": comm_bucketize.DEFAULT_BUCKET_SIZE,
             "wire_models": obs_telemetry.strategy_wire_models(layout, world),
+            # strategy × backend capability table on THIS mesh: which
+            # transports each strategy rides (robust included — slot-native
+            # exchange), which cells degrade, and why a cell is rejected
+            "backend_capabilities": (
+                comm_backends.capability_matrix(mesh, ef_axes) if ef_axes else None
+            ),
         }
     elif shape.kind == "prefill":
         from repro.models import transformer
@@ -284,6 +297,17 @@ def main():
                             f"bs={ob['bucket_size']}: {models}",
                             flush=True,
                         )
+                        caps = ob.get("backend_capabilities")
+                        if caps:
+                            cols = sorted(next(iter(caps.values())))
+                            print(
+                                "  obs: backend capability matrix "
+                                f"(strategy x {'/'.join(cols)}):",
+                                flush=True,
+                            )
+                            for strategy, row in caps.items():
+                                cells = "  ".join(f"{b}={_cap_cell(row[b])}" for b in cols)
+                                print(f"    {strategy:16s} {cells}", flush=True)
                     n_ok += 1
                 except Exception as e:
                     n_fail += 1

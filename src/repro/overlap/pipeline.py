@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import bucketize, compressed
+from repro.comm import bucketize, compressed, exchange, robust
 from repro.comm.collective import _default_backend, _worker_index, world_size
 from repro.core.aggregation import AggInfo
 from repro.core.compressors import Compressor, ScaledSignCompressor
@@ -51,7 +51,11 @@ AxisNames = tuple[str, ...]
 # bucket streams are partitioned across workers, not availability ranks, so
 # it stays on the one-shot path; dense has no compression stage to pipeline
 # (train/steps.py routes it to its own GSPMD path before this is reached).
-OVERLAP_STRATEGIES = ("ef_allgather", "ef_ring", "majority_vote")
+# The robust strategies pipeline their slot exchanges per group and defer the
+# order-statistics combine to phase 2, where the per-dtype-group stacks are
+# reassembled — same estimator input as the one-shot path, so the combine is
+# bitwise-identical (slot-native exchange, PR 10).
+OVERLAP_STRATEGIES = ("ef_allgather", "ef_ring", "majority_vote") + robust.ROBUST_STRATEGIES
 
 
 def make_overlapped_aggregator(
@@ -87,20 +91,25 @@ def build_overlapped_aggregator(
     *,
     backend=None,
     telemetry: bool = False,
+    byz_f: int = 0,
 ):
     """Schedule-driven aggregator with the same signature/contract as the
     one-shot ``build_bucketed_aggregator``: ``fn(buckets_w, err_w, srv_w,
     key) -> (agg, new_err_w, new_srv_w, info)``.
 
-    ``backend`` carries the payload-mean transport (see
-    :mod:`repro.comm.backends`). Stack-capable backends keep the gather /
-    decode split across the two phases (collective issued in phase 1, decode
-    deferred to phase 2); mean-only backends fuse decode into the phase-1
-    exchange — both orders are bitwise-identical to the one-shot path.
-    ``telemetry`` adds the :class:`repro.obs.telemetry.Telemetry` aux output
-    on ``info.telemetry``; here ``group_bytes`` splits the wire bill per
-    *schedule* group (the unit the pipeline exposes or hides), feeding the
-    comm-exposure model directly.
+    ``backend`` carries the payload-exchange transport (see
+    :mod:`repro.comm.backends`); each group's exchange is one slot-native
+    :class:`~repro.comm.exchange.PayloadStack` view. Fused-mean backends
+    (ring / DMA) collapse transport+decode into phase-1 per-hop units;
+    gather-style backends issue the collective in phase 1 and defer the mean
+    reading to phase 2 — both orders are bitwise-identical to the one-shot
+    path. The robust strategies (``byz_f > 0``) stage the views, reassemble
+    each dtype group's (W, nb, bs) slot stack in phase 2, and run the
+    order-statistics combine on the full group — the identical estimator
+    input (and result) as the one-shot robust path. ``telemetry`` adds the
+    :class:`repro.obs.telemetry.Telemetry` aux output on ``info.telemetry``;
+    here ``group_bytes`` splits the wire bill per *schedule* group (the unit
+    the pipeline exposes or hides), feeding the comm-exposure model directly.
     """
     if strategy not in OVERLAP_STRATEGIES:
         raise ValueError(
@@ -117,7 +126,9 @@ def build_overlapped_aggregator(
     ef = ef_axes if len(ef_axes) != 1 else ef_axes[0]
     masks = tuple(bucketize.valid_mask(layout, gi) for gi in range(len(layout.groups)))
     bucket_bits = comp.wire_bits(bs)
-    has_err = strategy in ("ef_allgather", "ef_ring")
+    has_err = strategy != "majority_vote"
+    # byz_f == 0 robust collapses to the mean reading (bitwise ef_allgather)
+    robust_mode = strategy in robust.ROBUST_STRATEGIES and byz_f > 0
     n_dtype = len(layout.groups)
 
     def body(buckets, err, srv, key):
@@ -153,27 +164,53 @@ def build_overlapped_aggregator(
                     payload, ne, d_b = compressed.ef_encode_buckets(
                         comp, b, e, mask=m, keys=None if ks is None else ks[sl.start : sl.stop]
                     )
-                    if backend.supports_stack:
-                        # issue the collective now, decode in phase 2
-                        staged.append((sl, ne, d_b, backend.gather_stack(payload, ef_axes)))
+                    view = backend.exchange(comp, payload, bs, ef_axes, w)
+                    if robust_mode or not backend.fused_mean:
+                        # gather-style transports issue their collective at
+                        # exchange time; the decode reading defers to phase 2
+                        # (the robust combine always defers — it needs the
+                        # reassembled per-group stack)
+                        staged.append((sl, ne, d_b, view))
                     else:
-                        out = backend.decode_mean(comp, payload, bs, ef_axes, w)
-                        staged.append((sl, ne, d_b, out))
+                        # fused transports: the whole per-hop exchange is the
+                        # schedulable phase-1 unit
+                        staged.append((sl, ne, d_b, view.mean()))
                     wire_bits += (w - 1) * nb * bucket_bits
                     g_bits += (w - 1) * nb * bucket_bits
             grp_bits.append(g_bits)
 
-        # ---- phase 2: decode gathered payloads, scatter into full stacks
+        # ---- phase 2: read the staged exchange views, scatter into full
+        # stacks. Robust mode reassembles each dtype group's (W, nb, bs)
+        # slot stack from the slice decodes and combines once per group —
+        # the one-shot estimator input, so the combine is value-identical.
         outs = [jnp.zeros((g.n_buckets, bs), jnp.float32) for g in layout.groups]
         new_errs = [jnp.zeros((g.n_buckets, bs), jnp.float32) for g in layout.groups]
         dens_full = [jnp.ones((g.n_buckets,), jnp.float32) for g in layout.groups]
+        stacks = (
+            [jnp.zeros((w, g.n_buckets, bs), jnp.float32) for g in layout.groups]
+            if robust_mode
+            else []
+        )
+        lane_w = jnp.zeros((w,), jnp.float32)
         for sl, ne, d_b, result in staged:
-            if strategy != "majority_vote" and backend.supports_stack:
-                result = compressed.decode_mean_buckets(comp, result, bs)
-            outs[sl.group] = outs[sl.group].at[sl.start : sl.stop].set(result)
+            if isinstance(result, exchange.PayloadStack):
+                if robust_mode:
+                    stacks[sl.group] = (
+                        stacks[sl.group].at[:, sl.start : sl.stop].set(result.decoded())
+                    )
+                    result = None
+                else:
+                    result = result.mean()
+            if result is not None:
+                outs[sl.group] = outs[sl.group].at[sl.start : sl.stop].set(result)
             if ne is not None:
                 new_errs[sl.group] = new_errs[sl.group].at[sl.start : sl.stop].set(ne)
                 dens_full[sl.group] = dens_full[sl.group].at[sl.start : sl.stop].set(d_b)
+        if robust_mode:
+            for gi in range(n_dtype):
+                outs[gi] = robust.combine_stack(strategy, stacks[gi], byz_f)
+                if telemetry:
+                    lane_w = lane_w + robust.filtered_lane_weights(strategy, stacks[gi], byz_f)
 
         # identical reduction order to the one-shot body: per dtype group
         # mean, then mean over groups, then pmean
@@ -189,7 +226,7 @@ def build_overlapped_aggregator(
                 density=lax.pmean(jnp.stack(dens), ef_axes),
                 wire_bytes=jnp.float32(wire_bits / 8.0),
                 group_bytes=jnp.asarray(grp_bits, jnp.float32) / 8.0,
-                filtered_lanes=jnp.zeros((w,), jnp.float32),
+                filtered_lanes=lane_w,
             )
         info = AggInfo(
             wire_bytes_per_device=jnp.float32(wire_bits / 8.0),

@@ -18,7 +18,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import CommSpec, backends, bucketize, collective, make_aggregator
+from repro.comm import (
+    CommSpec,
+    PayloadStack,
+    backends,
+    bucketize,
+    collective,
+    compressed,
+    make_aggregator,
+    robust,
+)
 from repro.comm.errors import (
     BackendCapabilityError,
     CommSpecError,
@@ -91,14 +100,59 @@ def test_ring_backend_requires_single_axis():
         backends.resolve(spec, mesh, ("data", "model"))
 
 
-def test_robust_strategies_are_xla_only():
+def test_robust_strategies_resolve_on_every_backend():
+    """PR 10: robust rides the slot-native exchange — explicit ring (and
+    pallas_dma, degrading to ring off-TPU) resolve instead of raising the
+    retired robust-needs-xla error; auto keeps the conservative xla."""
     mesh = make_host_mesh(data=1, model=1)
-    spec = CommSpec(strategy="ef_coord_median", bucket_size=128, backend="ring")
-    with pytest.raises(BackendCapabilityError, match="xla"):
-        backends.resolve(spec, mesh, ("data",))
-    # mean-only backends never materialize the gathered worker stack
-    with pytest.raises(BackendCapabilityError, match="materialize"):
-        backends.BACKENDS["ring"].gather_stack(None, ("data",))
+    dma_expect = "pallas_dma" if jax.default_backend() == "tpu" else "ring"
+    for strategy in robust.ROBUST_STRATEGIES:
+        for backend, expect in [("xla", "xla"), ("ring", "ring"), ("pallas_dma", dma_expect)]:
+            spec = CommSpec(strategy=strategy, bucket_size=128, backend=backend)
+            assert backends.resolve(spec, mesh, ("data",)).name == expect, (strategy, backend)
+
+
+def test_mean_only_backend_rejects_robust_strategy():
+    """supports_slots is the real capability query that replaced the old
+    hard-coded robust×backend special case."""
+
+    class MeanOnly(backends.CollectiveBackend):
+        name = "mean_only"
+        supports_slots = False
+
+    be = MeanOnly()
+    mesh = make_host_mesh(data=1, model=1)
+    be.check("ef_allgather", ScaledSignCompressor(), ("data",), mesh)
+    with pytest.raises(BackendCapabilityError, match="supports_slots=False"):
+        be.check("ef_coord_median", ScaledSignCompressor(), ("data",), mesh)
+
+
+def test_non_exchange_strategies_stay_xla_only():
+    mesh = make_host_mesh(data=1, model=1)
+    for strategy in ("dense", "majority_vote", "ef_alltoall"):
+        spec = CommSpec(strategy=strategy, bucket_size=128, backend="ring")
+        with pytest.raises(BackendCapabilityError, match="xla"):
+            backends.resolve(spec, mesh, ("data",))
+
+
+def test_capability_matrix_cells():
+    mesh = make_host_mesh(data=1, model=1)
+    mat = backends.capability_matrix(mesh)
+    assert set(mat) == set(collective.STRATEGIES)
+    for row in mat.values():
+        assert set(row) == set(backends.BACKENDS)
+    for strategy in robust.ROBUST_STRATEGIES + backends.MEAN_STRATEGIES:
+        assert mat[strategy]["xla"] == "ok"
+        assert mat[strategy]["ring"] == "ok"
+        assert mat[strategy]["pallas_dma"].startswith("ok"), mat[strategy]
+    for strategy in ("dense", "majority_vote", "ef_alltoall"):
+        assert mat[strategy]["xla"] == "ok"
+        assert mat[strategy]["ring"].startswith("--")
+        assert mat[strategy]["pallas_dma"].startswith("--")
+    # a multi-axis EF world shows up as the rings' single-axis rejection
+    mat2 = backends.capability_matrix(mesh, ef_axes=("data", "model"))
+    assert mat2["ef_allgather"]["ring"].startswith("--")
+    assert mat2["ef_allgather"]["xla"] == "ok"
 
 
 def test_pallas_dma_backend_speaks_sign_only():
@@ -247,6 +301,119 @@ def test_legacy_factory_keeps_canonical_tolerance_error():
 
 
 # ---------------------------------------------------------------------------
+# deprecated backend surface (PR 10 slot-native shims — pyproject errors
+# these warnings repo-wide; pytest.warns overrides the filter here)
+# ---------------------------------------------------------------------------
+
+
+class _CannedBackend(backends.CollectiveBackend):
+    """Exchange needing no axis context: the payload already carries (W,)."""
+
+    name = "canned"
+
+    def exchange(self, comp, payload, bucket_size, ef_axes, world):
+        return PayloadStack(comp, bucket_size, world, slots=payload)
+
+
+def _gathered_payload(world: int, nb: int = 2, bs: int = 128):
+    comp = ScaledSignCompressor()
+    rng = np.random.default_rng(world)
+    b_w = jnp.asarray(rng.normal(size=(world, nb, bs)).astype(np.float32))
+    payload_w, _, _ = jax.vmap(lambda b, e: compressed.ef_encode_buckets(comp, b, e))(
+        b_w, jnp.zeros_like(b_w)
+    )
+    return comp, compressed.BucketPayload(data=payload_w.data)
+
+
+def test_supports_stack_shim_warns_and_maps_to_supports_slots():
+    with pytest.warns(DeprecationWarning, match="supports_stack is deprecated"):
+        assert _CannedBackend().supports_stack is True
+
+
+def test_decode_mean_shim_warns_and_delegates_to_exchange_mean():
+    be = _CannedBackend()
+    comp, gathered = _gathered_payload(3)
+    with pytest.warns(DeprecationWarning, match=r"decode_mean\(\) is deprecated"):
+        got = be.decode_mean(comp, gathered, 128, (), 3)
+    want = compressed.decode_mean_buckets(comp, gathered, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_stack_shim_warns_and_returns_slots():
+    be = _CannedBackend()
+    _, gathered = _gathered_payload(2)
+    with pytest.warns(DeprecationWarning, match=r"gather_stack\(\) is deprecated"):
+        out = be.gather_stack(gathered, ())
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(gathered)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# PayloadStack view semantics
+# ---------------------------------------------------------------------------
+
+
+def test_payload_stack_needs_exactly_one_slot_source():
+    comp, gathered = _gathered_payload(2)
+    with pytest.raises(ValueError, match="exactly one"):
+        PayloadStack(comp, 128, 2)
+    with pytest.raises(ValueError, match="exactly one"):
+        PayloadStack(comp, 128, 2, slots=gathered, slots_fn=lambda: gathered)
+
+
+def test_payload_stack_readings_match_canonical_decodes():
+    comp, gathered = _gathered_payload(4)
+    view = PayloadStack(comp, 128, 4, slots=gathered)
+    assert not view.fused_mean
+    np.testing.assert_array_equal(
+        np.asarray(view.decoded()),
+        np.asarray(compressed.decode_buckets_stack(comp, gathered, 128)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(view.mean()),
+        np.asarray(compressed.decode_mean_buckets(comp, gathered, 128)),
+    )
+
+
+def test_payload_stack_memoizes_and_never_traces_the_unread_reading():
+    comp, gathered = _gathered_payload(3)
+    calls = {"slots": 0, "mean": 0}
+
+    def slots_fn():
+        calls["slots"] += 1
+        return gathered
+
+    def mean_fn():
+        calls["mean"] += 1
+        return compressed.decode_mean_buckets(comp, gathered, 128)
+
+    view = PayloadStack(comp, 128, 3, slots_fn=slots_fn, mean_fn=mean_fn)
+    assert view.fused_mean
+    view.mean()
+    view.mean()
+    # the mean-only consumer never pulls the slot gather into the program
+    assert calls == {"slots": 0, "mean": 1}
+    view.decoded()
+    view.decoded()
+    view.slots()
+    assert calls == {"slots": 1, "mean": 1}
+
+
+def test_robust_combine_view_collapses_to_mean_at_f0():
+    comp, gathered = _gathered_payload(4)
+    view = PayloadStack(comp, 128, 4, slots=gathered)
+    np.testing.assert_array_equal(
+        np.asarray(robust.combine_view("ef_coord_median", view, 0)),
+        np.asarray(compressed.decode_mean_buckets(comp, gathered, 128)),
+    )
+    stack = compressed.decode_buckets_stack(comp, gathered, 128)
+    np.testing.assert_array_equal(
+        np.asarray(robust.combine_view("ef_trimmed_mean", view, 1)),
+        np.asarray(robust.combine_stack("ef_trimmed_mean", stack, 1)),
+    )
+
+
+# ---------------------------------------------------------------------------
 # pallas_dma kernel oracles (interpret mode — run everywhere)
 # ---------------------------------------------------------------------------
 
@@ -295,6 +462,32 @@ def test_seed_slots_kernel_interpret_world_1():
     ref_w, ref_s = ref.dma_ring_slots_ref(words, scales, 0)
     np.testing.assert_array_equal(np.asarray(slot_w), np.asarray(ref_w))
     np.testing.assert_array_equal(np.asarray(slot_s), np.asarray(ref_s))
+
+
+@pytest.mark.pallas
+def test_dma_ring_slot_stack_interpret_world_1():
+    """The backend's slot reading of the DMA kernel (dma_ring_slot_stack) at
+    the world==1 degenerate, under a manual mesh so the in-kernel origin-id
+    derivation (lax.axis_index) has its axis: matches the slots-ref oracle."""
+    if dma_ring.pltpu is None:
+        pytest.skip("pallas TPU primitives unavailable in this jax build")
+    from jax.sharding import PartitionSpec as P
+
+    from repro.utils.compat import shard_map
+
+    words, scales = _payload_stack(1)
+    mesh = make_host_mesh(data=1, model=1)
+
+    def body(w, s):
+        slot_w, slot_s = dma_ring.dma_ring_slot_stack(w[0], s[0], ("data",), 1, interpret=True)
+        return slot_w[None], slot_s[None]
+
+    out_w, out_s = shard_map(
+        body, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data"))
+    )(words, scales)
+    ref_w, ref_s = ref.dma_ring_slots_ref(words, scales, 0)
+    np.testing.assert_array_equal(np.asarray(out_w[0]), np.asarray(ref_w))
+    np.testing.assert_array_equal(np.asarray(out_s[0]), np.asarray(ref_s))
 
 
 @pytest.mark.pallas
@@ -432,6 +625,83 @@ print(json.dumps({
 """
 
 
+_ROBUST_DRIVER = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(world)d"
+import sys
+sys.path.insert(0, os.path.join(%(repo)r, "src"))
+import jax, jax.numpy as jnp, numpy as np
+from repro.comm import CommSpec, bucketize, make_aggregator, robust
+from repro.configs.base import ByzConfig, OverlapConfig
+from repro.core.compressors import ScaledSignCompressor
+from repro.launch.mesh import make_host_mesh, use_mesh
+from repro.obs import telemetry as obs_telemetry
+
+W = %(world)d
+F = %(byz_f)d
+mesh = make_host_mesh(data=W, model=1)
+rng = np.random.default_rng(7)
+tree = {"a": jnp.zeros((700,), jnp.float32), "b": jnp.zeros((37, 11), jnp.float32)}
+layout = bucketize.build_layout(tree, 128)
+buckets = bucketize.flatten_buckets(layout, tree)
+grads = [tuple(jnp.asarray(rng.normal(size=(W,) + b.shape).astype(np.float32))
+               for b in buckets) for _ in range(5)]
+comp = ScaledSignCompressor()
+key = jax.random.PRNGKey(0)
+
+def run(strategy, backend, f, telemetry="off", overlap=False):
+    spec = CommSpec(strategy=strategy, compressor=comp, bucket_size=128,
+                    backend=backend, byz=ByzConfig(f=f) if f else None,
+                    telemetry=telemetry,
+                    overlap=OverlapConfig(n_groups=2) if overlap else None)
+    with use_mesh(mesh):
+        agg = jax.jit(make_aggregator(spec, layout, mesh, ("data",),
+                                      params=tree if overlap else None))
+        err = tuple(jnp.zeros_like(b) for b in grads[0])
+        outs = info = None
+        for g in grads:  # 5-step trajectory: EF residuals feed forward
+            outs, err, _, info = agg(g, err, (), key)
+        return ([np.asarray(o) for o in outs], [np.asarray(e) for e in err], info)
+
+def same(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(a[0] + a[1], b[0] + b[1]))
+
+mean_runs = ({be: {"ef_allgather": run("ef_allgather", be, 0),
+                   "ef_ring": run("ef_ring", be, 0)}
+              for be in ("xla", "ring", "pallas_dma")} if F == 0 else None)
+res = {}
+for strategy in robust.ROBUST_STRATEGIES:
+    r = {}
+    base = run(strategy, "xla", F)
+    for backend in ("ring", "pallas_dma"):
+        r["parity_" + backend] = bool(same(base, run(strategy, backend, F)))
+    if F == 0:
+        # declared-honest robust == the plain mean strategy, per backend
+        for backend, runs in mean_runs.items():
+            mean_s = "ef_ring" if backend == "ring" else "ef_allgather"
+            r["mean_collapse_" + backend] = bool(
+                same(run(strategy, backend, 0), runs[mean_s]))
+    else:
+        r["overlap_matches_oneshot"] = bool(
+            same(base, run(strategy, "xla", F, overlap=True)))
+    wire = float(base[2].wire_bytes_per_device)
+    r["wire_matches_model"] = wire == obs_telemetry.modeled_wire_bytes(
+        strategy, layout, W, comp)
+    r["wire_matches_allgather"] = wire == obs_telemetry.modeled_wire_bytes(
+        "ef_allgather", layout, W, comp)
+    # telemetry="full" emits per-lane filter weights on every transport
+    lanes = {}
+    for backend in ("xla", "ring", "pallas_dma"):
+        t = run(strategy, backend, F, telemetry="full")[2].telemetry
+        lanes[backend] = None if t is None else [
+            float(x) for x in np.asarray(t.filtered_lanes)]
+    r["lanes_shape_ok"] = all(v is not None and len(v) == W for v in lanes.values())
+    r["lanes_agree"] = len({tuple(v) for v in lanes.values()}) == 1
+    res[strategy] = r
+print(json.dumps(res))
+"""
+
+
 def _run_driver(code_tmpl, **kw):
     code = code_tmpl % {"repo": REPO, **kw}
     proc = subprocess.run(
@@ -465,3 +735,29 @@ def test_pallas_dma_trajectory_bitwise(world):
     assert out["dma_vs_allgather"], f"W={world}: pallas_dma diverged: {out['traj']}"
     assert out["dma_vs_ring"], f"W={world}: ring strategy diverged: {out['traj']}"
     assert out["traj"][-1] < out["traj"][0], out["traj"]
+
+
+@pytest.mark.slow
+@pytest.mark.byz
+@pytest.mark.parametrize("world,byz_f", [(2, 0), (4, 0), (4, 1), (8, 1)])
+def test_robust_strategies_ride_every_backend(world, byz_f):
+    """The PR-10 acceptance contract: every robust strategy's 5-step EF
+    trajectory is bitwise-equal across xla / ring / pallas_dma (off-TPU
+    degrade), byz_f=0 collapses bitwise to the backend's own mean strategy
+    (W=2 is f=0-only — 2f < W), robust-under-overlap matches one-shot, the
+    wire bill equals the analytic model (== allgather's), and telemetry's
+    filtered-lane weights come out identical on every transport."""
+    out = _run_driver(_ROBUST_DRIVER, world=world, byz_f=byz_f)
+    assert set(out) == set(robust.ROBUST_STRATEGIES)
+    for strategy, r in out.items():
+        ctx = (strategy, world, byz_f)
+        assert r["parity_ring"], ctx
+        assert r["parity_pallas_dma"], ctx
+        assert r["wire_matches_model"], ctx
+        assert r["wire_matches_allgather"], ctx
+        assert r["lanes_shape_ok"] and r["lanes_agree"], (ctx, r)
+        if byz_f == 0:
+            for backend in ("xla", "ring", "pallas_dma"):
+                assert r[f"mean_collapse_{backend}"], (ctx, backend)
+        else:
+            assert r["overlap_matches_oneshot"], ctx

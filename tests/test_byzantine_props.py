@@ -1,10 +1,12 @@
-"""Property-based contracts for the robust estimators (repro.comm.robust).
+"""Property-based contracts for the robust estimators (repro.comm.robust)
+and the slot-native exchange view (repro.comm.exchange.PayloadStack).
 
 ``hypothesis`` is an optional dev dependency (requirements-dev.txt); the whole
 module skips cleanly when it is absent so tier-1 collection never fails — the
 deterministic oracles in tests/test_byzantine.py still run.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -13,7 +15,8 @@ hypothesis = pytest.importorskip("hypothesis")
 st = pytest.importorskip("hypothesis.strategies")
 hnp = pytest.importorskip("hypothesis.extra.numpy")
 
-from repro.comm import robust
+from repro.comm import PayloadStack, compressed, robust
+from repro.core.compressors import ScaledSignCompressor, get_compressor
 
 pytestmark = pytest.mark.byz
 
@@ -70,3 +73,87 @@ def test_estimates_bounded_by_honest_range_under_one_adversary(stack, evil):
     ):
         est = np.asarray(fn(jnp.asarray(adversarial)))
         assert np.all(est >= lo - 1e-4) and np.all(est <= hi + 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# PayloadStack: the slot-native exchange view every backend returns
+# ---------------------------------------------------------------------------
+
+#: every registered compressor the bucketed EF path speaks — the mean-collapse
+#: contract is compressor-agnostic, not a sign-family accident
+COMPRESSORS = (
+    ("scaled_sign", {}),
+    ("sign", {}),
+    ("block_scaled_sign", {}),
+    ("top_k", {"k": 8}),
+    ("random_k", {"k": 8}),
+    ("qsgd", {}),
+    ("low_rank", {}),
+    ("identity", {}),
+)
+
+# (W, nb, 32) worker bucket stacks: bs % 32 == 0 for the sign word packing,
+# W >= 3 so byz_f=1 respects the 2f < W breakdown bound
+BUCKET_STACKS = st.integers(min_value=3, max_value=6).flatmap(
+    lambda w: hnp.arrays(
+        np.float32,
+        st.tuples(st.just(w), st.integers(1, 2), st.just(32)),
+        elements=st.floats(-1e3, 1e3, width=32, allow_nan=False, allow_subnormal=False),
+    )
+)
+
+
+def _exchange_view(comp, b_w):
+    """Encode each worker's buckets and wrap the gathered stack exactly the
+    way a slot transport's ``exchange()`` does."""
+    bs = b_w.shape[-1]
+    pays = [
+        compressed.ef_encode_buckets(
+            comp, jnp.asarray(b), jnp.zeros_like(jnp.asarray(b)), key=jax.random.PRNGKey(i)
+        )[0]
+        for i, b in enumerate(b_w)
+    ]
+    data = jax.tree.map(lambda *xs: jnp.stack(xs), *[p.data for p in pays])
+    gathered = compressed.BucketPayload(data=data)
+    return PayloadStack(comp, bs, len(pays), slots=gathered), gathered
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(BUCKET_STACKS, st.randoms(use_true_random=False))
+def test_payload_stack_combines_are_slot_permutation_invariant(b_w, rng):
+    """Which lane of the exchange a worker's payload landed in must not move
+    the coord_median / trimmed_mean estimate — origin-id slot order is a
+    transport detail, not an estimator input."""
+    view, gathered = _exchange_view(ScaledSignCompressor(), b_w)
+    w = b_w.shape[0]
+    perm = list(range(w))
+    rng.shuffle(perm)
+    shuffled = PayloadStack(
+        view.comp,
+        view.bucket_size,
+        w,
+        slots=compressed.BucketPayload(
+            data=jax.tree.map(lambda x: x[np.asarray(perm)], gathered.data)
+        ),
+    )
+    for strategy in ("ef_coord_median", "ef_trimmed_mean"):
+        a = np.asarray(robust.combine_view(strategy, view, 1))
+        b = np.asarray(robust.combine_view(strategy, shuffled, 1))
+        np.testing.assert_array_equal(a, b, err_msg=strategy)
+
+
+@pytest.mark.parametrize("name,kw", COMPRESSORS, ids=[c[0] for c in COMPRESSORS])
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(BUCKET_STACKS)
+def test_payload_stack_mean_collapse_bitwise_for_every_compressor(name, kw, b_w):
+    """``view.mean()`` and the byz_f=0 robust collapse are bitwise-equal to
+    the canonical ``decode_mean_buckets`` over the same gathered stack, for
+    every registered compressor — the contract that keeps a declared-honest
+    robust run on today's mean path."""
+    comp = get_compressor(name, **kw)
+    view, gathered = _exchange_view(comp, b_w)
+    want = np.asarray(compressed.decode_mean_buckets(comp, gathered, b_w.shape[-1]))
+    np.testing.assert_array_equal(np.asarray(view.mean()), want)
+    for strategy in robust.ROBUST_STRATEGIES:
+        got = np.asarray(robust.combine_view(strategy, _exchange_view(comp, b_w)[0], 0))
+        np.testing.assert_array_equal(got, want, err_msg=strategy)
